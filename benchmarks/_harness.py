@@ -1,0 +1,118 @@
+"""Shared benchmark substrate: workload generators (value size / NDV /
+zipf skew per the paper's YCSB extension), system builders for the four
+competitors, and reporting helpers.
+
+Scale note: the paper inserts 6.4e7 pairs on a 512 GB workstation; this
+container gets a proportionally scaled default (--full raises it).  All
+comparisons are ratios between systems under identical workloads, which
+is what the paper's figures show.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, Iterable, List, Optional
+
+import numpy as np
+
+from repro.core import LSMConfig, LSMTree, Predicate
+from repro.storage.devices import DEVICES
+
+SYSTEMS = {
+    "lsm_opd": dict(codec="opd"),                       # the paper
+    "rocks_plain": dict(codec="plain"),                 # RocksDB
+    "rocks_heavy": dict(codec="heavy"),                 # RocksDB+snappy
+    "blobdb": dict(codec="blob"),                       # BlobDB
+    "blobdb_zstd": dict(codec="blob", blob_compress=True),  # BlobDB+dict
+}
+
+
+def build_tree(system: str, value_width: int, file_bytes: int = 512 * 1024,
+               **kw) -> LSMTree:
+    base = dict(SYSTEMS[system])
+    base.update(kw)
+    return LSMTree(LSMConfig(value_width=value_width, file_bytes=file_bytes,
+                             l0_limit=4, size_ratio=8, **base))
+
+
+# --------------------------------------------------------------------------- #
+# value generators (paper §5.1: size, NDV, distribution varied)
+# --------------------------------------------------------------------------- #
+def make_vocab(ndv: int, width: int, rng) -> np.ndarray:
+    """ndv distinct width-byte strings with a shared structured prefix
+    (mimics the paper's 'commodity category_field' example)."""
+    cats = np.asarray([b"cat_%05d_" % (i % 1000) for i in range(ndv)])
+    fill = rng.integers(97, 123, (ndv, max(0, width - 10))).astype(np.uint8)
+    out = np.zeros(ndv, dtype=f"S{width}")
+    for i in range(ndv):
+        out[i] = cats[i] + fill[i].tobytes()
+    return out
+
+
+def zipf_probs(c: int, s: float) -> np.ndarray:
+    k = np.arange(1, c + 1, dtype=np.float64)
+    p = 1.0 / np.power(k, s)
+    return p / p.sum()
+
+
+def gen_values(n: int, width: int, ndv_ratio: float = 0.01,
+               zipf_s: float = 0.0, seed: int = 0) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    ndv = max(1, int(n * ndv_ratio))
+    vocab = make_vocab(ndv, width, rng)
+    if zipf_s > 0.01:
+        idx = rng.choice(ndv, size=n, p=zipf_probs(ndv, zipf_s))
+    else:
+        idx = rng.integers(0, ndv, n)
+    return vocab[idx]
+
+
+def gen_keys(n: int, key_space: Optional[int] = None, seed: int = 1) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, key_space or 4 * n, n, dtype=np.uint64)
+
+
+# --------------------------------------------------------------------------- #
+# measurement helpers
+# --------------------------------------------------------------------------- #
+@dataclasses.dataclass
+class BenchRow:
+    name: str
+    us_per_call: float
+    derived: Dict[str, float]
+
+    def csv(self) -> str:
+        extra = ";".join(f"{k}={v:.6g}" for k, v in self.derived.items())
+        return f"{self.name},{self.us_per_call:.3f},{extra}"
+
+
+def timed(fn: Callable, *args, **kw):
+    t0 = time.perf_counter()
+    out = fn(*args, **kw)
+    return out, time.perf_counter() - t0
+
+
+def io_seconds(tree: LSMTree, device: str) -> float:
+    rep = tree.io_report(DEVICES[device])
+    return rep["modeled_read_s"] + rep["modeled_write_s"]
+
+
+def effective_seconds(cpu_s: float, tree: LSMTree, device: str) -> float:
+    """CPU + modeled-I/O wall time for one device class (the paper's
+    breakdown structure; I/O and CPU overlap is not modeled)."""
+    return cpu_s + io_seconds(tree, device)
+
+
+def load_tree(tree: LSMTree, n: int, width: int, ndv_ratio: float = 0.01,
+              zipf_s: float = 0.0, seed: int = 0) -> float:
+    keys = gen_keys(n, seed=seed)
+    vals = gen_values(n, width, ndv_ratio, zipf_s, seed=seed + 1)
+    _, dt = timed(tree.put_batch, keys, vals)
+    return dt
+
+
+def pct(xs: List[float], p: float) -> float:
+    if not xs:
+        return float("nan")
+    return float(np.percentile(np.asarray(xs), p))

@@ -1,0 +1,47 @@
+"""Figure 7: compaction cost vs value size — total compaction CPU
+seconds (with the paper's seven-stage breakdown), compaction I/O bytes,
+and modeled wall time per device class, for each system."""
+
+from __future__ import annotations
+
+from typing import List
+
+from benchmarks._harness import (BenchRow, SYSTEMS, build_tree, io_seconds,
+                                 load_tree)
+from repro.storage.devices import DEVICES
+
+VALUE_SIZES = [32, 128, 512, 1024]
+
+
+def run(n: int = 60_000, systems=None, value_sizes=None,
+        ndv_ratio: float = 0.01, zipf_s: float = 0.0) -> List[BenchRow]:
+    rows = []
+    for width in (value_sizes or VALUE_SIZES):
+        for system in (systems or SYSTEMS):
+            tree = build_tree(system, width)
+            load_tree(tree, n, width, ndv_ratio, zipf_s)
+            st = tree.compaction_stats
+            cpu_s = st.total()
+            io_bytes = tree.compaction_in_bytes + tree.compaction_out_bytes
+            derived = {
+                "compactions": tree.n_compactions,
+                "io_mb": io_bytes / 2**20,
+                "read_s": st.seconds.get("read", 0.0),
+                "decode_s": st.seconds.get("decode", 0.0),
+                "merge_s": st.seconds.get("merge", 0.0),
+                "encode_s": st.seconds.get("encode", 0.0),
+                "dict_mb": tree.dict_bytes / 2**20,
+            }
+            for dev_name, dev in DEVICES.items():
+                derived[f"wall_s_{dev_name}"] = cpu_s + \
+                    dev.read_seconds(tree.compaction_in_bytes, tree.n_compactions) + \
+                    dev.write_seconds(tree.compaction_out_bytes, tree.n_compactions)
+            rows.append(BenchRow(f"compaction/v{width}/{system}",
+                                 cpu_s * 1e6 / max(tree.n_compactions, 1),
+                                 derived))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r.csv())

@@ -1,0 +1,48 @@
+"""Paper §4.2 cost model (Table 1): analytic predictions + an EMPIRICAL
+check of inequality I1 — measure OPD vs plain compaction CPU while
+sweeping NDV and locate the crossover; the paper predicts it at an NDV
+ratio around 5% of file capacity (border D_i ~ 9e4 for a 32MB file)."""
+
+from __future__ import annotations
+
+from typing import List
+
+from benchmarks._harness import BenchRow, build_tree, load_tree
+from repro.core.costmodel import (CostParams, border_ndv, compaction_cpu,
+                                  compaction_io, filter_cpu,
+                                  inequality_I1_border)
+
+
+def run(n: int = 50_000, width: int = 64) -> List[BenchRow]:
+    rows = []
+    # ---- analytic table (paper defaults) -------------------------------- #
+    p = CostParams()
+    cc, cio, fc = compaction_cpu(p), compaction_io(p), filter_cpu(p)
+    rows.append(BenchRow("costmodel/analytic", 0.0, {
+        "I1_border_DlogD": inequality_I1_border(p),
+        "I1_border_ndv": border_ndv(p),
+        "compact_cpu_plain_over_opd": cc["plain"] / cc["opd"],
+        "compact_cpu_heavy_over_opd": cc["heavy"] / cc["opd"],
+        "compact_io_plain_over_opd": cio["plain"] / cio["opd"],
+        "filter_cpu_plain_over_opd": fc["plain"] / fc["opd"],
+    }))
+    # ---- empirical I1 sweep --------------------------------------------- #
+    for ndv_ratio in (0.005, 0.02, 0.08, 0.3, 0.8):
+        t_opd = build_tree("lsm_opd", width)
+        t_plain = build_tree("rocks_plain", width)
+        load_tree(t_opd, n, width, ndv_ratio=ndv_ratio)
+        load_tree(t_plain, n, width, ndv_ratio=ndv_ratio)
+        cpu_opd = t_opd.compaction_stats.total()
+        cpu_plain = t_plain.compaction_stats.total()
+        rows.append(BenchRow(f"costmodel/empirical_ndv_{ndv_ratio:g}", 0.0, {
+            "opd_compact_cpu_s": cpu_opd,
+            "plain_compact_cpu_s": cpu_plain,
+            "plain_over_opd": cpu_plain / max(cpu_opd, 1e-9),
+            "opd_encode_s": t_opd.compaction_stats.seconds.get("encode", 0.0),
+        }))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r.csv())

@@ -1,0 +1,106 @@
+"""Figure 9: filter processing latency vs value size and selectivity.
+
+Runs the paper's prefix filter over all systems, plus the OPD engine
+with its three evaluation backends (numpy / Pallas opd_filter / Pallas
+packed_filter in interpret mode) so the direct-on-compressed pipeline is
+exercised end to end."""
+
+from __future__ import annotations
+
+import time
+from typing import List
+
+import numpy as np
+
+from benchmarks._harness import (BenchRow, SYSTEMS, build_tree, io_seconds,
+                                 load_tree)
+from repro.core import Predicate
+
+VALUE_SIZES = [32, 128, 512]
+N_FILTERS = 5
+
+
+def _selectivity_pred(sel: float, ndv: int) -> Predicate:
+    """Prefix over the structured vocab: cat ids are uniform over
+    min(1000, ndv) categories, so a prefix covering k of them selects
+    ~k/ncat of the data."""
+    ncat = min(1000, ndv)
+    k = max(1, int(sel * ncat))
+    if k >= ncat:
+        return Predicate("prefix", b"cat_")
+    return Predicate("range", b"cat_%05d_" % 0, b"cat_%05d_\xff" % (k - 1))
+
+
+def run(n: int = 60_000, systems=None, value_sizes=None,
+        selectivity: float = 0.01) -> List[BenchRow]:
+    rows = []
+    ndv = max(1, int(n * 0.01))
+    for width in (value_sizes or VALUE_SIZES):
+        trees = {}
+        for system in (systems or SYSTEMS):
+            tree = build_tree(system, width)
+            load_tree(tree, n, width)
+            trees[system] = tree
+        pred = _selectivity_pred(selectivity, ndv)
+        for system, tree in trees.items():
+            io0 = tree.store.stats.snapshot()
+            t0 = time.perf_counter()
+            for _ in range(N_FILTERS):
+                res = tree.filter(pred)
+            cpu_s = (time.perf_counter() - t0) / N_FILTERS
+            st = tree.filter_stats
+            d = tree.store.stats.delta(io0)
+            derived = {
+                "matches": res.keys.shape[0],
+                "scanned": res.n_scanned,
+                "read_mb_per_filter": d.bytes_read / 2**20 / N_FILTERS,
+                "decode_s": st.seconds.get("decode", 0.0) / N_FILTERS,
+                "eval_s": st.seconds.get("filter", 0.0) / N_FILTERS,
+                "merge_s": st.seconds.get("merge", 0.0) / N_FILTERS,
+            }
+            rows.append(BenchRow(f"filter/v{width}/{system}",
+                                 cpu_s * 1e6, derived))
+    return rows
+
+
+def run_selectivity(n: int = 60_000, width: int = 128) -> List[BenchRow]:
+    rows = []
+    ndv = max(1, int(n * 0.01))
+    tree_opd = build_tree("lsm_opd", width)
+    tree_plain = build_tree("rocks_plain", width)
+    load_tree(tree_opd, n, width)
+    load_tree(tree_plain, n, width)
+    for sel in (0.001, 0.01, 0.05, 0.2):
+        pred = _selectivity_pred(sel, ndv)
+        for name, tree in (("lsm_opd", tree_opd), ("rocks_plain", tree_plain)):
+            t0 = time.perf_counter()
+            for _ in range(N_FILTERS):
+                res = tree.filter(pred)
+            cpu_s = (time.perf_counter() - t0) / N_FILTERS
+            rows.append(BenchRow(f"filter_sel/{sel:g}/{name}", cpu_s * 1e6,
+                                 {"matches": res.keys.shape[0]}))
+    return rows
+
+
+def run_backends(n: int = 60_000, width: int = 128) -> List[BenchRow]:
+    """numpy vs Pallas(interpret) backends — correctness-equal, timing
+    shows host cost only (TPU timing requires real hardware)."""
+    import dataclasses
+    rows = []
+    for backend in ("numpy", "jax", "jax_packed"):
+        tree = build_tree("lsm_opd", width)
+        tree.cfg = dataclasses.replace(tree.cfg, filter_backend=backend)
+        load_tree(tree, n, width)
+        pred = Predicate("prefix", b"cat_00")
+        t0 = time.perf_counter()
+        for _ in range(3):
+            res = tree.filter(pred)
+        cpu_s = (time.perf_counter() - t0) / 3
+        rows.append(BenchRow(f"filter_backend/{backend}", cpu_s * 1e6,
+                             {"matches": res.keys.shape[0]}))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run() + run_selectivity() + run_backends():
+        print(r.csv())

@@ -1,0 +1,60 @@
+"""Figure 10: HTAP — transactional ops interleaved with intensive filter
+evaluations after a bulk load.  Emits a TP-throughput timeline plus
+per-filter latencies (the paper's 300s run is scaled down; the plotted
+quantity is the same)."""
+
+from __future__ import annotations
+
+import time
+from typing import List
+
+import numpy as np
+
+from benchmarks._harness import (BenchRow, SYSTEMS, build_tree, gen_values,
+                                 load_tree, pct)
+from repro.core import Predicate
+
+
+def run(n_load: int = 40_000, n_rounds: int = 10, ops_per_round: int = 1500,
+        width: int = 128, systems=None) -> List[BenchRow]:
+    rows = []
+    for system in (systems or SYSTEMS):
+        tree = build_tree(system, width)
+        load_tree(tree, n_load, width)
+        rng = np.random.default_rng(11)
+        keyspace = 4 * n_load
+        vals = gen_values(ops_per_round, width, 0.01, seed=3)
+        pred = Predicate("prefix", b"cat_00")
+        tp_curve, filter_lat = [], []
+        for rnd in range(n_rounds):
+            t0 = time.perf_counter()
+            for i in range(ops_per_round):
+                r = rng.random()
+                k = int(rng.integers(0, keyspace))
+                if r < 0.5:
+                    tree.put(k, bytes(vals[i]))
+                elif r < 0.9:
+                    tree.get(k)
+                else:
+                    tree.range_lookup(k, k + 500)
+            tp_s = time.perf_counter() - t0
+            tp_curve.append(ops_per_round / tp_s)
+            f0 = time.perf_counter()
+            tree.filter(pred)
+            filter_lat.append(time.perf_counter() - f0)
+        derived = {
+            "tp_mean_ops_s": float(np.mean(tp_curve)),
+            "tp_min_ops_s": float(np.min(tp_curve)),
+            "tp_max_ops_s": float(np.max(tp_curve)),
+            "filter_p50_ms": pct(filter_lat, 50) * 1e3,
+            "filter_p99_ms": pct(filter_lat, 99) * 1e3,
+            "stalls": tree.write_stalls,
+        }
+        rows.append(BenchRow(f"htap/{system}",
+                             1e6 / max(np.mean(tp_curve), 1e-9), derived))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r.csv())

@@ -1,0 +1,57 @@
+"""Figure 6 (right): hybrid transactional processing — 50% updates,
+40% point reads, 10% short range lookups (500 adjacent keys), after a
+bulk load.  Reports overall throughput + per-op-type P99."""
+
+from __future__ import annotations
+
+import time
+from typing import List
+
+import numpy as np
+
+from benchmarks._harness import (BenchRow, SYSTEMS, build_tree, gen_keys,
+                                 gen_values, io_seconds, load_tree, pct)
+
+
+def run(n_load: int = 40_000, n_ops: int = 8_000, width: int = 128,
+        systems=None) -> List[BenchRow]:
+    rows = []
+    for system in (systems or SYSTEMS):
+        tree = build_tree(system, width)
+        load_tree(tree, n_load, width)
+        io0 = tree.store.stats.snapshot()
+        rng = np.random.default_rng(5)
+        keyspace = 4 * n_load
+        vals = gen_values(n_ops, width, 0.01, seed=9)
+        lats = {"update": [], "point": [], "range": []}
+        t0 = time.perf_counter()
+        for i in range(n_ops):
+            r = rng.random()
+            k = int(rng.integers(0, keyspace))
+            c0 = time.perf_counter()
+            if r < 0.5:
+                tree.put(k, bytes(vals[i]))
+                lats["update"].append(time.perf_counter() - c0)
+            elif r < 0.9:
+                tree.get(k)
+                lats["point"].append(time.perf_counter() - c0)
+            else:
+                tree.range_lookup(k, k + 2 * keyspace // n_load * 250)
+                lats["range"].append(time.perf_counter() - c0)
+        cpu_s = time.perf_counter() - t0
+        d = tree.store.stats.delta(io0)
+        derived = {
+            "ops_per_s_cpu": n_ops / cpu_s,
+            "p99_update_us": pct(lats["update"], 99) * 1e6,
+            "p99_point_us": pct(lats["point"], 99) * 1e6,
+            "p99_range_us": pct(lats["range"], 99) * 1e6,
+            "read_mb": d.bytes_read / 2**20,
+        }
+        rows.append(BenchRow(f"hybrid/v{width}/{system}",
+                             cpu_s / n_ops * 1e6, derived))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r.csv())

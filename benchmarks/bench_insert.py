@@ -1,0 +1,52 @@
+"""Figure 6 (left): pure key-value insertion throughput vs value size.
+
+Reports ops/s from measured CPU time plus modeled I/O time per device
+class, P99 insert latency (per-chunk approximation), write stalls and
+final tree shape for each of the five systems."""
+
+from __future__ import annotations
+
+import time
+from typing import List
+
+import numpy as np
+
+from benchmarks._harness import (BenchRow, SYSTEMS, build_tree, gen_keys,
+                                 gen_values, io_seconds, pct)
+
+VALUE_SIZES = [32, 128, 512, 1024]
+
+
+def run(n: int = 60_000, systems=None, value_sizes=None) -> List[BenchRow]:
+    rows = []
+    for width in (value_sizes or VALUE_SIZES):
+        keys = gen_keys(n)
+        vals = gen_values(n, width, ndv_ratio=0.01)
+        for system in (systems or SYSTEMS):
+            tree = build_tree(system, width)
+            chunk = 2000
+            lat = []
+            t0 = time.perf_counter()
+            for lo in range(0, n, chunk):
+                c0 = time.perf_counter()
+                tree.put_batch(keys[lo:lo + chunk], vals[lo:lo + chunk])
+                lat.append((time.perf_counter() - c0) / chunk)
+            cpu_s = time.perf_counter() - t0
+            derived = {
+                "ops_per_s_cpu": n / cpu_s,
+                "p99_us": pct(lat, 99) * 1e6,
+                "stalls": tree.write_stalls,
+                "files": tree.n_files,
+                "disk_mb": tree.disk_bytes / 2**20,
+                "dict_mb": tree.dict_bytes / 2**20,
+            }
+            for dev in ("hdd", "sata_ssd", "nvme_ssd"):
+                derived[f"ops_per_s_{dev}"] = n / (cpu_s + io_seconds(tree, dev))
+            rows.append(BenchRow(f"insert/v{width}/{system}",
+                                 cpu_s / n * 1e6, derived))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r.csv())

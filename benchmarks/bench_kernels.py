@@ -1,0 +1,90 @@
+"""Kernel micro-benchmarks: Pallas kernels (interpret mode — CPU-host
+cost only; on TPU these compile to Mosaic) vs their jnp oracles vs the
+engine's vectorized numpy path.  The derived column reports bytes
+scanned per call so the TPU-side roofline is reproducible:
+packed_filter scans S_O-packed bytes instead of S_V strings — the
+paper's parallelism/compression_ratio factor."""
+
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks._harness import BenchRow
+from repro.core.sct import bitpack as np_bitpack
+from repro.kernels import ops, ref
+
+N = 1 << 20  # 1M codes
+
+
+def _time(fn, *args, reps=3):
+    fn(*args)  # warmup/compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+        jax.block_until_ready(out) if hasattr(out, "block_until_ready") else None
+    return (time.perf_counter() - t0) / reps
+
+
+def run() -> List[BenchRow]:
+    rng = np.random.default_rng(0)
+    rows = []
+    codes = rng.integers(0, 60000, N).astype(np.int32)
+    lo, hi = 100, 30000
+
+    t_np = _time(lambda: (codes >= lo) & (codes <= hi))
+    rows.append(BenchRow("kernel/range_filter/numpy", t_np * 1e6,
+                         {"bytes_scanned": codes.nbytes, "n": N}))
+
+    jc = jnp.asarray(codes)
+    t_ref = _time(jax.jit(lambda c: ref.range_filter_codes(c, lo, hi)), jc)
+    rows.append(BenchRow("kernel/range_filter/jnp_ref", t_ref * 1e6,
+                         {"bytes_scanned": codes.nbytes, "n": N}))
+
+    t_k = _time(lambda: ops.range_filter_codes(codes, lo, hi))
+    rows.append(BenchRow("kernel/range_filter/pallas_interp", t_k * 1e6,
+                         {"bytes_scanned": codes.nbytes, "n": N}))
+
+    for width in (8, 16):
+        words = np_bitpack(codes % (1 << width), width)
+        t_p = _time(lambda w=words: ops.range_filter_packed(w, width, 1, 200))
+        rows.append(BenchRow(f"kernel/packed_filter_w{width}/pallas_interp",
+                             t_p * 1e6,
+                             {"bytes_scanned": words.nbytes, "n": N,
+                              "compression_vs_plain_64B": 64 * N / words.nbytes}))
+
+    t_pack = _time(lambda: ops.pack_codes(codes % 256, 8))
+    rows.append(BenchRow("kernel/bitpack_w8/pallas_interp", t_pack * 1e6,
+                         {"n": N}))
+
+    nbits = 1 << 14
+    bloom = rng.integers(0, 2**32, nbits // 32, dtype=np.uint64).astype(np.uint32)
+    keys = rng.integers(0, 2**32, 4096, dtype=np.uint64).astype(np.uint32)
+    t_b = _time(lambda: ops.bloom_probe(bloom, nbits, keys))
+    rows.append(BenchRow("kernel/bloom_probe/pallas_interp", t_b * 1e6,
+                         {"queries": 4096}))
+
+    B, L, D, Ns = 1, 256, 256, 16
+    u = rng.normal(size=(B, L, D)).astype(np.float32)
+    dt = np.abs(rng.normal(size=(B, L, D))).astype(np.float32) * 0.1
+    A = -np.abs(rng.normal(size=(D, Ns))).astype(np.float32)
+    Bm = rng.normal(size=(B, L, Ns)).astype(np.float32)
+    Cm = rng.normal(size=(B, L, Ns)).astype(np.float32)
+    t_s = _time(lambda: ops.ssm_scan(u, dt, A, Bm, Cm, chunk=32))
+    rows.append(BenchRow("kernel/ssm_scan/pallas_interp", t_s * 1e6,
+                         {"tokens": B * L, "d_inner": D}))
+    t_sr = _time(jax.jit(lambda *a: ref.ssm_scan_batched(*a)),
+                 jnp.asarray(u), jnp.asarray(dt), jnp.asarray(A),
+                 jnp.asarray(Bm), jnp.asarray(Cm))
+    rows.append(BenchRow("kernel/ssm_scan/jnp_ref", t_sr * 1e6,
+                         {"tokens": B * L, "d_inner": D}))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r.csv())

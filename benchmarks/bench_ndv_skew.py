@@ -1,0 +1,43 @@
+"""Figure 8: LSM-OPD compaction sensitivity to NDV ratio and value-
+distribution skew (zipf s), value size fixed at 128B.  Also records the
+paper's claims: OPD memory stays modest below 10% NDV; compaction
+degrades as NDV grows past the I1 border."""
+
+from __future__ import annotations
+
+from typing import List
+
+from benchmarks._harness import BenchRow, build_tree, load_tree
+
+NDV_RATIOS = [0.001, 0.01, 0.05, 0.10, 0.20]
+ZIPF_S = [0.01, 0.5, 1.0, 1.5, 2.0]
+
+
+def run(n: int = 50_000, width: int = 128) -> List[BenchRow]:
+    rows = []
+    for ndv in NDV_RATIOS:
+        tree = build_tree("lsm_opd", width)
+        load_tree(tree, n, width, ndv_ratio=ndv)
+        st = tree.compaction_stats
+        rows.append(BenchRow(
+            f"ndv/{ndv:g}/lsm_opd", st.total() * 1e6 / max(tree.n_compactions, 1),
+            {"compact_cpu_s": st.total(),
+             "encode_s": st.seconds.get("encode", 0.0),
+             "dict_mb": tree.dict_bytes / 2**20,
+             "disk_mb": tree.disk_bytes / 2**20,
+             "files": tree.n_files}))
+    for s in ZIPF_S:
+        tree = build_tree("lsm_opd", width)
+        load_tree(tree, n, width, ndv_ratio=0.01, zipf_s=s)
+        st = tree.compaction_stats
+        rows.append(BenchRow(
+            f"zipf/{s:g}/lsm_opd", st.total() * 1e6 / max(tree.n_compactions, 1),
+            {"compact_cpu_s": st.total(),
+             "dict_mb": tree.dict_bytes / 2**20,
+             "disk_mb": tree.disk_bytes / 2**20}))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r.csv())

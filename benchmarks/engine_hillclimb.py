@@ -1,0 +1,85 @@
+"""§Perf engine hillclimb driver — the paper-technique-representative
+pair: measured CPU time of the two scan-based operations the paper
+optimizes (compaction, filter) on the LSM-OPD engine.
+
+Measures three configurations cumulatively:
+  A  baseline   : per-block bloom construction + per-candidate Python
+                  shadow-check loop (forced via monkeypatch)
+  B  +vbloom    : vectorized single-pass BlockIndex.build
+  C  +fastshadow: vectorized shadow check when the run's cached
+                  max_seqno <= snapshot (always true for engine snapshots)
+
+    PYTHONPATH=src python -m benchmarks.engine_hillclimb
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks._harness import build_tree, load_tree
+from repro.core import Predicate
+from repro.core.blocks import BlockIndex
+import repro.core.sct as sct_mod
+
+
+def measure(label: str, n: int = 60_000, width: int = 128, n_filters: int = 5):
+    tree = build_tree("lsm_opd", width)
+    t0 = time.perf_counter()
+    load_tree(tree, n, width)
+    load_s = time.perf_counter() - t0
+    comp_s = tree.compaction_stats.total()
+    flush_s = tree.flush_stats.total()
+    pred = Predicate("prefix", b"cat_00")
+    t0 = time.perf_counter()
+    for _ in range(n_filters):
+        res = tree.filter(pred)
+    filt_s = (time.perf_counter() - t0) / n_filters
+    merge_s = tree.filter_stats.seconds.get("merge", 0.0) / n_filters
+    print(f"{label:12s} load={load_s:6.3f}s compact_cpu={comp_s:6.3f}s "
+          f"flush_encode={flush_s:6.3f}s filter={filt_s * 1e3:7.1f}ms "
+          f"(merge {merge_s * 1e3:6.1f}ms) matches={res.keys.shape[0]}")
+    return {"load_s": load_s, "compact_s": comp_s, "flush_s": flush_s,
+            "filter_ms": filt_s * 1e3, "filter_merge_ms": merge_s * 1e3}
+
+
+def main() -> None:
+    results = {}
+    real_build = BlockIndex.build
+    real_max_seq = {}
+
+    # ---- A: force legacy paths ------------------------------------------ #
+    BlockIndex.build = BlockIndex.build_loop
+    orig_build_sct = sct_mod.build_sct
+
+    def build_sct_slow(**kw):
+        s = orig_build_sct(**kw)
+        s.max_seqno = 2**62  # force the per-candidate shadow loop
+        return s
+
+    sct_mod.build_sct = build_sct_slow
+    import repro.core.lsm as lsm_mod
+    import repro.core.compaction as comp_mod
+    lsm_mod.build_sct = build_sct_slow
+    comp_mod.build_sct = build_sct_slow
+    results["A_baseline"] = measure("A baseline")
+
+    # ---- B: + vectorized bloom build ------------------------------------ #
+    BlockIndex.build = real_build
+    results["B_vbloom"] = measure("B +vbloom")
+
+    # ---- C: + fast shadow path ------------------------------------------ #
+    sct_mod.build_sct = orig_build_sct
+    lsm_mod.build_sct = orig_build_sct
+    comp_mod.build_sct = orig_build_sct
+    results["C_fastshadow"] = measure("C +fastshadow")
+
+    a, c = results["A_baseline"], results["C_fastshadow"]
+    print(f"\nspeedups A->C: compact {a['compact_s'] / c['compact_s']:.2f}x, "
+          f"flush {a['flush_s'] / c['flush_s']:.2f}x, "
+          f"filter {a['filter_ms'] / c['filter_ms']:.2f}x")
+
+
+if __name__ == "__main__":
+    main()

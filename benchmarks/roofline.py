@@ -1,0 +1,88 @@
+"""Roofline report: reads the dry-run JSON records and renders the
+EXPERIMENTS.md tables (§Dry-run, §Roofline)."""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, List
+
+
+def load(out_dir: str, variant: str = "base") -> List[Dict]:
+    recs = []
+    for p in sorted(glob.glob(os.path.join(out_dir, f"*__{variant}.json"))):
+        with open(p) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def fmt_s(x: float) -> str:
+    if x >= 1.0:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x * 1e3:.1f}ms"
+    return f"{x * 1e6:.0f}us"
+
+
+def table(recs: List[Dict], mesh: str = "single") -> str:
+    rows = ["| arch | shape | compute | memory | collective | dominant | "
+            "useful | roofline | mem/dev |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        if r.get("mesh") != mesh:
+            continue
+        if r.get("skipped"):
+            rows.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                        f"SKIP ({r['reason'][:40]}...) | — | — | — |")
+            continue
+        if not r.get("ok"):
+            rows.append(f"| {r['arch']} | {r['shape']} | FAIL | | | | | | |")
+            continue
+        t = r["terms"]
+        mem = r.get("memory", {}).get("per_device_total", 0) / 2**30
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {fmt_s(t['compute_s'])} | "
+            f"{fmt_s(t['memory_s'])} | {fmt_s(t['collective_s'])} | "
+            f"{r['dominant'].replace('_s', '')} | "
+            f"{r['useful_flop_ratio']:.2f} | {r['roofline_frac']:.3f} | "
+            f"{mem:.1f}GiB |")
+    return "\n".join(rows)
+
+
+def summary(recs: List[Dict]) -> str:
+    ok = [r for r in recs if r.get("ok") and not r.get("skipped")]
+    skip = [r for r in recs if r.get("skipped")]
+    fail = [r for r in recs if not r.get("ok")]
+    lines = [f"cells ok={len(ok)} skipped={len(skip)} failed={len(fail)}"]
+    for r in fail:
+        lines.append(f"  FAIL {r['arch']}/{r['shape']}/{r['mesh']}")
+    if ok:
+        worst = sorted(ok, key=lambda r: r["roofline_frac"])[:5]
+        lines.append("worst roofline fractions:")
+        for r in worst:
+            lines.append(f"  {r['arch']}/{r['shape']}/{r['mesh']}: "
+                         f"{r['roofline_frac']:.4f} ({r['dominant']})")
+        coll = sorted(ok, key=lambda r: -r["terms"]["collective_s"])[:5]
+        lines.append("most collective-bound:")
+        for r in coll:
+            lines.append(f"  {r['arch']}/{r['shape']}/{r['mesh']}: "
+                         f"coll={fmt_s(r['terms']['collective_s'])}")
+    return "\n".join(lines)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--variant", default="base")
+    ap.add_argument("--mesh", default="single")
+    args = ap.parse_args()
+    recs = load(args.out, args.variant)
+    print(table(recs, args.mesh))
+    print()
+    print(summary(recs))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,71 @@
+"""Benchmark harness entry point — one function per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--full] [--only NAME]
+
+Prints ``name,us_per_call,derived`` CSV rows.  Default scale finishes in
+a few minutes on one core; ``--full`` approaches the paper's workload
+sizes (hours)."""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from benchmarks import (bench_compaction, bench_costmodel, bench_filter,
+                        bench_htap, bench_hybrid, bench_insert,
+                        bench_kernels, bench_ndv_skew)
+
+SUITES = {
+    # paper Figure 6 (left): insertion throughput vs value size
+    "insert": lambda full: bench_insert.run(n=200_000 if full else 40_000),
+    # paper Figure 6 (right): hybrid updates/point/range
+    "hybrid": lambda full: bench_hybrid.run(
+        n_load=150_000 if full else 30_000, n_ops=20_000 if full else 5_000),
+    # paper Figure 7: compaction time/IO vs value size
+    "compaction": lambda full: bench_compaction.run(
+        n=200_000 if full else 40_000),
+    # paper Figure 8: NDV + skew sensitivity
+    "ndv_skew": lambda full: bench_ndv_skew.run(n=150_000 if full else 30_000),
+    # paper Figure 9: filter latency vs value size
+    "filter": lambda full: bench_filter.run(n=200_000 if full else 40_000),
+    # paper Figure 9 (selectivity sweep)
+    "filter_sel": lambda full: bench_filter.run_selectivity(
+        n=200_000 if full else 40_000),
+    # OPD filter backends (numpy / Pallas interpret)
+    "filter_backends": lambda full: bench_filter.run_backends(
+        n=100_000 if full else 30_000),
+    # paper Figure 10: HTAP timeline
+    "htap": lambda full: bench_htap.run(
+        n_load=150_000 if full else 25_000,
+        n_rounds=12 if full else 6,
+        ops_per_round=3000 if full else 1000),
+    # paper Table 1 / §4.2: analytic cost model + empirical I1 border
+    "costmodel": lambda full: bench_costmodel.run(
+        n=150_000 if full else 30_000),
+    # Pallas kernels vs oracles
+    "kernels": lambda full: bench_kernels.run(),
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    names = [args.only] if args.only else list(SUITES)
+    t0 = time.time()
+    for name in names:
+        print(f"# ---- {name} ----", flush=True)
+        try:
+            rows = SUITES[name](args.full)
+            for r in rows:
+                print(r.csv(), flush=True)
+        except Exception as e:  # keep the harness going; report the failure
+            print(f"{name},ERROR,{type(e).__name__}:{e}", file=sys.stderr)
+            raise
+    print(f"# total {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

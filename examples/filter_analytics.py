@@ -1,0 +1,62 @@
+"""Analytics deep-dive: the paper's Figure 5 pipeline, end to end, with
+the Pallas kernels in the loop (interpret mode on CPU; Mosaic on TPU).
+
+String predicate -> O(log D) dictionary search -> code range ->
+vectorized evaluation on (bit-packed) codes -> O(1) decode of matches.
+
+    PYTHONPATH=src python examples/filter_analytics.py
+"""
+
+import time
+
+import numpy as np
+
+from repro.core import LSMConfig, LSMTree, Predicate
+from repro.core.sct import bitpack
+from repro.kernels import ops
+
+rng = np.random.default_rng(0)
+N, VW = 200_000, 128
+
+tree = LSMTree(LSMConfig(codec="opd", value_width=VW, file_bytes=1 * 2**20))
+vocab = np.asarray(
+    [b"commodity/%03d/" % i + b"d" * 80 for i in range(1000)], dtype=f"S{VW}")
+tree.put_batch(rng.integers(0, 10**9, N, dtype=np.uint64),
+               vocab[rng.integers(0, 1000, N)])
+
+pred = Predicate("prefix", b"commodity/00")  # categories 000..009
+print(f"predicate: prefix {pred.a!r}")
+
+for sct in tree.all_runs()[:1]:
+    lo, hi = sct.opd.code_range(pred)
+    print(f"\nSCT file {sct.file_id}: n={sct.n} D={sct.opd.size} "
+          f"code_bits={sct.opd.code_bits} packed_width={sct.code_bits}")
+    print(f"  string predicate -> code range [{lo}, {hi}) "
+          f"via 2 binary searches over {sct.opd.size} dict entries")
+
+    # numpy baseline on int32 codes
+    t0 = time.perf_counter()
+    m_np = (sct.evs >= lo) & (sct.evs < hi)
+    t_np = time.perf_counter() - t0
+    # Pallas opd_filter (interpret)
+    t0 = time.perf_counter()
+    m_k = ops.range_filter_codes(sct.evs, lo, hi - 1)
+    t_k = time.perf_counter() - t0
+    # Pallas packed_filter: DIRECTLY on the bit-packed words
+    t0 = time.perf_counter()
+    bm = ops.range_filter_packed(sct.packed, sct.code_bits, lo, hi - 1)
+    m_p = ops.bitmap_to_mask(bm, sct.code_bits, sct.n)
+    t_p = time.perf_counter() - t0
+    assert np.array_equal(m_np, m_k) and np.array_equal(m_np, m_p)
+    print(f"  eval on codes:  numpy {t_np * 1e3:7.2f}ms | "
+          f"pallas(interp) {t_k * 1e3:7.2f}ms | packed {t_p * 1e3:7.2f}ms "
+          f"(all identical: {int(m_np.sum())} matches)")
+    print(f"  bytes touched:  strings would be {sct.n * VW:,}B; packed codes "
+          f"are {sct.packed.nbytes:,}B ({sct.n * VW / sct.packed.nbytes:.0f}x less)")
+    # O(1) decode of matches
+    sample = sct.opd.decode(sct.evs[np.nonzero(m_np)[0][:3]])
+    print(f"  decoded sample: {[bytes(v)[:20] for v in sample]}")
+
+res = tree.filter(pred)
+print(f"\nfull-tree filter: {res.keys.shape[0]} current-version matches "
+      f"of {res.n_scanned} scanned")

@@ -1,0 +1,4 @@
+"""repro: LSM-OPD (direct computing on compressed data in LSM-Trees) in JAX,
+embedded in a multi-pod training/serving framework."""
+
+__version__ = "0.1.0"

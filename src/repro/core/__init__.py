@@ -1,0 +1,11 @@
+# The paper's primary contribution: the LSM-OPD engine (OPD encoding,
+# SCT layout, Algorithm-1 compaction, vectorized filter evaluation).
+from repro.core.lsm import LSMConfig, LSMTree, Snapshot
+from repro.core.opd import OPD, Predicate, as_fixed_bytes
+from repro.core.sct import SCT, bitpack, bitunpack, pack_width
+from repro.core.stats import StageStats
+
+__all__ = [
+    "LSMConfig", "LSMTree", "Snapshot", "OPD", "Predicate", "as_fixed_bytes",
+    "SCT", "bitpack", "bitunpack", "pack_width", "StageStats",
+]

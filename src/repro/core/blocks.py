@@ -1,0 +1,149 @@
+"""Block-granular SCT metadata: per-block key ranges + bloom filters.
+
+Paper §3 (on-disk persisting component): "keys and encoded values are
+organized into small column chunks in blocks (4 kb in practice). And the
+file metadata, such as block-wise bloom filters, key ranges and offsets,
+are stored in extra blocks.  The block-based management facilitates
+point_lookup and short_range lookup by pruning unnecessary block
+retrievals, while [having] negligible impact on analytical performance
+since all blocks are still consecutively stored."
+
+Everything is vectorized numpy; the TPU-side batched probe lives in
+``repro.kernels.bloom_probe`` (same splitmix-style hash family).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import numpy as np
+
+_MASK64 = np.uint64(0xFFFFFFFFFFFFFFFF)
+BLOOM_SEEDS = np.asarray(
+    [0x9E3779B97F4A7C15, 0xBF58476D1CE4E5B9, 0x94D049BB133111EB,
+     0xD6E8FEB86659FD93, 0xA5A3564E6F5C1D9B, 0xC2B2AE3D27D4EB4F],
+    dtype=np.uint64,
+)
+
+
+def splitmix64(x: np.ndarray) -> np.ndarray:
+    x = np.asarray(x, dtype=np.uint64)
+    with np.errstate(over="ignore"):
+        x = (x + np.uint64(0x9E3779B97F4A7C15)) & _MASK64
+        x = ((x ^ (x >> np.uint64(30))) * np.uint64(0xBF58476D1CE4E5B9)) & _MASK64
+        x = ((x ^ (x >> np.uint64(27))) * np.uint64(0x94D049BB133111EB)) & _MASK64
+        return x ^ (x >> np.uint64(31))
+
+
+@dataclasses.dataclass
+class BlockIndex:
+    """Per-block first/last key + a shared bloom bit array per block."""
+
+    entries_per_block: int
+    first_keys: np.ndarray      # uint64 [n_blocks]
+    last_keys: np.ndarray       # uint64 [n_blocks]
+    bloom_words: np.ndarray     # uint32 [n_blocks, words_per_block]
+    n_hashes: int
+    nbits: int                  # bits per block bloom
+
+    @property
+    def n_blocks(self) -> int:
+        return int(self.first_keys.shape[0])
+
+    @property
+    def nbytes(self) -> int:
+        return int(self.first_keys.nbytes + self.last_keys.nbytes + self.bloom_words.nbytes)
+
+    # ------------------------------------------------------------------ #
+    @staticmethod
+    def build(
+        keys: np.ndarray,
+        entries_per_block: int,
+        bits_per_key: int = 10,
+        n_hashes: int = 6,
+    ) -> "BlockIndex":
+        """Single-pass vectorized construction (§Perf engine hillclimb
+        change 1): hash ALL keys for all seeds at once and scatter into
+        the flattened [n_blocks x words] bloom with one bitwise_or.at
+        per seed, instead of a Python loop over blocks.  Identical
+        output to build_loop (tested)."""
+        n = keys.shape[0]
+        epb = max(1, int(entries_per_block))
+        n_blocks = max(1, (n + epb - 1) // epb)
+        nbits = max(64, int(epb * bits_per_key))
+        nbits = ((nbits + 31) // 32) * 32
+        words_pb = nbits // 32
+        bloom = np.zeros(n_blocks * words_pb, dtype=np.uint32)
+        first = np.zeros(n_blocks, np.uint64)
+        last = np.zeros(n_blocks, np.uint64)
+        if n:
+            edges = np.minimum(np.arange(n_blocks) * epb, n - 1)
+            ends = np.minimum(edges + epb - 1, n - 1)
+            first[:] = keys[edges]
+            last[:] = keys[ends]
+            blk_of = (np.arange(n, dtype=np.int64) // epb) * words_pb
+            for s in range(n_hashes):
+                h = splitmix64(keys ^ BLOOM_SEEDS[s]) % np.uint64(nbits)
+                w = blk_of + (h >> np.uint64(5)).astype(np.int64)
+                bit = np.uint32(1) << (h & np.uint64(31)).astype(np.uint32)
+                np.bitwise_or.at(bloom, w, bit)
+        return BlockIndex(epb, first, last, bloom.reshape(n_blocks, words_pb),
+                          n_hashes, nbits)
+
+    @staticmethod
+    def build_loop(
+        keys: np.ndarray,
+        entries_per_block: int,
+        bits_per_key: int = 10,
+        n_hashes: int = 6,
+    ) -> "BlockIndex":
+        """Legacy per-block construction (kept for §Perf A/B timing)."""
+        n = keys.shape[0]
+        epb = max(1, int(entries_per_block))
+        n_blocks = max(1, (n + epb - 1) // epb)
+        nbits = max(64, int(epb * bits_per_key))
+        nbits = ((nbits + 31) // 32) * 32
+        words_pb = nbits // 32
+        bloom = np.zeros((n_blocks, words_pb), dtype=np.uint32)
+        first = np.empty(n_blocks, np.uint64)
+        last = np.empty(n_blocks, np.uint64)
+        for b in range(n_blocks):
+            blk = keys[b * epb : (b + 1) * epb]
+            if blk.shape[0] == 0:  # only possible for n == 0
+                first[b] = np.uint64(0)
+                last[b] = np.uint64(0)
+                continue
+            first[b] = blk[0]
+            last[b] = blk[-1]
+            for s in range(n_hashes):
+                h = splitmix64(blk ^ BLOOM_SEEDS[s]) % np.uint64(nbits)
+                w = (h >> np.uint64(5)).astype(np.int64)
+                bit = np.uint32(1) << (h & np.uint64(31)).astype(np.uint32)
+                np.bitwise_or.at(bloom[b], w, bit)
+        return BlockIndex(epb, first, last, bloom, n_hashes, nbits)
+
+    # ------------------------------------------------------------------ #
+    def locate_block(self, key: np.uint64) -> int:
+        """Block that may contain key, or -1 (prunes via key ranges)."""
+        b = int(np.searchsorted(self.last_keys, key, side="left"))
+        if b >= self.n_blocks or self.first_keys[b] > key:
+            return -1
+        return b
+
+    def may_contain(self, block: int, key: np.uint64) -> bool:
+        nbits = np.uint64(self.nbits)
+        for s in range(self.n_hashes):
+            h = splitmix64(np.uint64(key) ^ BLOOM_SEEDS[s]) % nbits
+            w = int(h >> np.uint64(5))
+            bit = np.uint32(1) << np.uint32(h & np.uint64(31))
+            if not (self.bloom_words[block, w] & bit):
+                return False
+        return True
+
+    def probe(self, key: np.uint64) -> Tuple[int, bool]:
+        """(block, may_contain) combined key-range + bloom probe."""
+        b = self.locate_block(key)
+        if b < 0:
+            return -1, False
+        return b, self.may_contain(b, key)

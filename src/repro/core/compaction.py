@@ -1,0 +1,225 @@
+"""OPD-based leveling compaction — paper Algorithm 1 + competitor paths.
+
+The merge itself is codec-agnostic: assemble key columns + per-entry
+source ids, merge-sort by (key asc, seqno desc), GC stale versions and
+(at the bottom level) tombstones, then cut into output files.
+
+What differs per codec is what happens to the *values*:
+
+  'opd'    values never leave the encoded domain.  Per output SCT the new
+           dictionary is rebuilt from the *input dictionaries only*
+           (OPD.merge_subset — O(sum D_i log sum D_i) string comparisons)
+           and every <ev, src> pair is remapped to its new dense code by
+           one O(1) table gather.  This is the paper's central claim: the
+           S_V-sized strings contribute only D_i log D_i, not N, to the
+           compaction CPU cost.
+  'plain'  values are copied (C_C x F per the paper's cost model).
+  'heavy'  every input block is really zlib-decompressed and every output
+           block re-compressed (the C_D/C_E terms that dominate the
+           paper's heavy-compression competitor).
+  'blob'   pointers are copied (values untouched — WiscKey's advantage);
+           dropped entries mark blob garbage for GC.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.opd import OPD
+from repro.core.sct import SCT, BlobManager, build_sct
+from repro.core.stats import StageStats
+from repro.storage.io import FileStore
+
+_SEQ_MAX = np.uint64(0xFFFFFFFFFFFFFFFF)
+
+
+@dataclasses.dataclass
+class CompactionResult:
+    outputs: List[SCT]
+    n_in: int
+    n_out: int
+    n_dropped: int
+    dict_compares: int  # total distinct values sorted (paper's D_i terms)
+
+
+def merge_scts(
+    inputs: List[SCT],
+    *,
+    out_level: int,
+    is_bottom: bool,
+    file_entries: int,
+    store: FileStore,
+    stats: StageStats,
+    blob_mgr: Optional[BlobManager] = None,
+    block_bytes: int = 4096,
+    bloom_bits_per_key: int = 10,
+) -> CompactionResult:
+    codec = inputs[0].codec
+    n_in = sum(s.n for s in inputs)
+
+    # ---- stage: read (charge full-file I/O for every input) -------------- #
+    with stats.time("read"):
+        for s in inputs:
+            store.read(s.file_id)
+
+    # ---- stage: decode (only non-OPD codecs pay this) -------------------- #
+    raw_cols: Optional[List[np.ndarray]] = None
+    with stats.time("decode"):
+        if codec == "heavy":
+            raw_cols = [s._decompress_all()[2] for s in inputs]  # real zlib
+        elif codec == "plain":
+            raw_cols = [s.values for s in inputs]
+        # 'opd': values stay encoded; 'blob': values not touched.
+
+    # ---- stage: merge (keys + GC; the C_K / C_C terms) -------------------- #
+    with stats.time("merge"):
+        keys = np.concatenate([s.keys for s in inputs])
+        seqnos = np.concatenate([s.seqnos for s in inputs])
+        tombs = np.concatenate([s.tombs for s in inputs])
+        srcs = np.concatenate(
+            [np.full(s.n, i, np.int32) for i, s in enumerate(inputs)]
+        )
+        idxs = np.concatenate([np.arange(s.n, dtype=np.int64) for s in inputs])
+        order = np.lexsort((_SEQ_MAX - seqnos, keys))  # key asc, seqno desc
+        keys, seqnos, tombs = keys[order], seqnos[order], tombs[order]
+        srcs, idxs = srcs[order], idxs[order]
+        # newest version per key survives
+        keep = np.ones(keys.shape[0], np.bool_)
+        keep[1:] = keys[1:] != keys[:-1]
+        if is_bottom:
+            keep &= ~tombs  # physical delete at the deepest level
+        keys, seqnos, tombs = keys[keep], seqnos[keep], tombs[keep]
+        srcs, idxs = srcs[keep], idxs[keep]
+    n_out = int(keys.shape[0])
+    n_dropped = n_in - n_out
+
+    # ---- stage: encode + write per output file --------------------------- #
+    outputs: List[SCT] = []
+    dict_compares = 0
+    kwargs = dict(
+        level=out_level,
+        codec=codec,
+        key_bytes=inputs[0].key_bytes,
+        value_width=inputs[0].value_width,
+        block_bytes=block_bytes,
+        bloom_bits_per_key=bloom_bits_per_key,
+        store=store,
+        blob_mgr=blob_mgr,
+    )
+
+    if codec == "blob" and blob_mgr is not None:
+        _mark_blob_garbage(inputs, srcs, idxs, tombs, blob_mgr, n_in)
+
+    for lo in range(0, max(n_out, 1), file_entries):
+        hi = min(lo + file_entries, n_out)
+        if hi <= lo:
+            break
+        ck, cs, ct = keys[lo:hi], seqnos[lo:hi], tombs[lo:hi]
+        c_src, c_idx = srcs[lo:hi], idxs[lo:hi]
+        with stats.time("encode"):
+            if codec == "opd":
+                encoded, ncmp = _remap_codes(inputs, c_src, c_idx, ct)
+                dict_compares += ncmp
+                out = build_sct(keys=ck, seqnos=cs, tombs=ct, encoded=encoded, **kwargs)
+            elif codec in ("plain", "heavy"):
+                vals = _gather_raw(raw_cols, c_src, c_idx, inputs[0].value_width)
+                out = build_sct(keys=ck, seqnos=cs, tombs=ct, raw_values=vals, **kwargs)
+            elif codec == "blob":
+                fids = _gather_i64([s.vfids for s in inputs], c_src, c_idx)
+                ptrs = _gather_u64([s.vptrs for s in inputs], c_src, c_idx)
+                out = build_sct(
+                    keys=ck, seqnos=cs, tombs=ct, blob_refs=(fids, ptrs), **kwargs
+                )
+            else:
+                raise ValueError(codec)
+        outputs.append(out)
+
+    return CompactionResult(outputs, n_in, n_out, n_dropped, dict_compares)
+
+
+# --------------------------------------------------------------------------- #
+# Algorithm 1 lines 4-9: per-output-subsequence dictionary rebuild + remap
+# --------------------------------------------------------------------------- #
+def _remap_codes(
+    inputs: List[SCT],
+    c_src: np.ndarray,
+    c_idx: np.ndarray,
+    c_tombs: np.ndarray,
+) -> Tuple[Tuple[np.ndarray, OPD], int]:
+    n_src = len(inputs)
+    old_evs = np.full(c_src.shape[0], -1, np.int32)
+    used_masks = []
+    for i, s in enumerate(inputs):
+        sel = c_src == i
+        if sel.any():
+            old_evs[sel] = s.evs[c_idx[sel]]
+        m = np.zeros(s.opd.size, np.bool_)
+        live = sel & ~c_tombs
+        if live.any():
+            cs = old_evs[live]
+            m[cs[cs >= 0]] = True
+        used_masks.append(m)
+    # reverse index + new OPD: sorted-array merge of the used dictionary
+    # entries (paper's RBTree replaced by branch-free searchsorted — see
+    # DESIGN.md hardware-adaptation table).
+    new_opd, remaps = OPD.merge_subset([s.opd for s in inputs], used_masks)
+    ncmp = sum(int(m.sum()) for m in used_masks)
+    # index table: flattened <src, ev> -> ev' (O(1) gather per entry)
+    offsets = np.zeros(n_src + 1, np.int64)
+    for i, s in enumerate(inputs):
+        offsets[i + 1] = offsets[i] + s.opd.size
+    flat = (
+        np.concatenate(remaps)
+        if offsets[-1] > 0
+        else np.zeros(0, np.int32)
+    )
+    new_evs = np.full(c_src.shape[0], -1, np.int32)
+    live = (old_evs >= 0) & ~c_tombs
+    if live.any():
+        new_evs[live] = flat[old_evs[live].astype(np.int64) + offsets[c_src[live]]]
+    return (new_evs, new_opd), ncmp
+
+
+def _gather_raw(raw_cols, c_src, c_idx, width) -> np.ndarray:
+    out = np.zeros(c_src.shape[0], f"S{width}")
+    for i, col in enumerate(raw_cols):
+        sel = c_src == i
+        if sel.any():
+            out[sel] = col[c_idx[sel]]
+    return out
+
+
+def _gather_u64(cols, c_src, c_idx) -> np.ndarray:
+    out = np.zeros(c_src.shape[0], np.uint64)
+    for i, col in enumerate(cols):
+        sel = c_src == i
+        if sel.any():
+            out[sel] = col[c_idx[sel]]
+    return out
+
+
+def _gather_i64(cols, c_src, c_idx) -> np.ndarray:
+    out = np.full(c_src.shape[0], -1, np.int64)
+    for i, col in enumerate(cols):
+        sel = c_src == i
+        if sel.any():
+            out[sel] = col[c_idx[sel]]
+    return out
+
+
+def _mark_blob_garbage(inputs, srcs, idxs, tombs, blob_mgr: BlobManager, n_in: int):
+    """Entries dropped by the merge leave garbage in their blob files."""
+    kept = np.zeros(n_in, np.bool_)
+    starts = np.zeros(len(inputs) + 1, np.int64)
+    for i, s in enumerate(inputs):
+        starts[i + 1] = starts[i] + s.n
+    kept[starts[srcs] + idxs] = True
+    for i, s in enumerate(inputs):
+        k = kept[starts[i] : starts[i + 1]]
+        dead = (~k) & (s.vfids >= 0)
+        if dead.any():
+            for fid in np.unique(s.vfids[dead]):
+                blob_mgr.mark_dead(int(fid), int((s.vfids[dead] == fid).sum()))

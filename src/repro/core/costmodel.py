@@ -1,0 +1,126 @@
+"""Analytic cost model from paper §4.2 (Table 1 terms + inequality I1).
+
+Implements the closed-form compaction / filter CPU+I/O costs for the
+three designs the paper analyzes (no compression, heavy compression,
+LSM-OPD) so benchmarks can check the *measured* engine against the
+*predicted* crossover points — in particular inequality I1:
+
+    D_i log2 D_i  <  (F / S_V) * (S_V - S_O) / (S_K + S_O)
+
+below which LSM-OPD compactions are strictly cheaper than uncompressed
+compactions.  Paper example: F=32MB, S_V=64, S_K=16, S_O=4 gives a border
+around D_i ~ 9e4 (NDV/file ~ 5%).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict
+
+
+@dataclasses.dataclass(frozen=True)
+class CostParams:
+    """Table 1. Costs are per-byte (IPB = instructions per byte, relative)."""
+
+    N: int = 2**24          # total inserted KV pairs
+    F: int = 32 * 2**20     # file size (bytes)
+    T: int = 10             # size ratio
+    S_K: int = 16           # key bytes
+    S_V: int = 64           # uncompressed value bytes
+    S_O: int = 4            # OPD-encoded value bytes
+    D_i: int = 10**5        # distinct values per file
+    C_K: float = 1.0        # merge-sort cost of keys
+    C_C: float = 0.3        # copy cost
+    C_E: float = 50.0       # heavy compress
+    C_D: float = 20.0       # heavy decompress
+    C_S: float = 1.0        # string comparison
+    r: float = 0.01         # filter selectivity
+    S_I: int = 512          # SIMD width (bytes)
+
+    # ---------------- derived tree shape (Figure 4 effect) --------------- #
+    def n_files(self, record_bytes: float) -> int:
+        return max(1, math.ceil(self.N * record_bytes / self.F))
+
+    def levels_of(self, m: int) -> float:
+        """sum_i l_i for m files under leveling with ratio T (paper's
+        l_i = ceil(log_T(i(T-1)+1)) closed form)."""
+        return sum(math.ceil(math.log(i * (self.T - 1) + 1, self.T)) for i in range(1, m + 1))
+
+    @property
+    def m_plain(self) -> int:
+        return self.n_files(self.S_K + self.S_V)
+
+    @property
+    def m_heavy(self) -> int:
+        return self.n_files((self.S_K + self.S_V) * 0.5)
+
+    @property
+    def m_opd(self) -> int:
+        return self.n_files(self.S_K + self.S_O)
+
+
+def compaction_io(p: CostParams) -> Dict[str, float]:
+    """C_IO = sum_i F * l_i * T (total compaction I/O per design)."""
+    return {
+        "plain": p.F * p.levels_of(p.m_plain) * p.T,
+        "heavy": p.F * p.levels_of(p.m_heavy) * p.T,
+        "opd": p.F * p.levels_of(p.m_opd) * p.T,
+    }
+
+
+def compaction_cpu(p: CostParams) -> Dict[str, float]:
+    """The three C_CPU expressions of §4.2.1 (same notation)."""
+    per_file_keys = (p.N / p.m_plain) * p.S_K * p.C_K
+    plain = (per_file_keys + p.F * p.C_C) * p.levels_of(p.m_plain) * p.T
+
+    per_file_keys_h = (p.N / p.m_heavy) * p.S_K * p.C_K
+    heavy = (per_file_keys_h + p.F * (p.C_C + p.C_D + p.C_E)) * p.levels_of(p.m_heavy) * p.T
+
+    per_file_keys_o = (p.N / p.m_opd) * p.S_K * p.C_K
+    dict_term = p.S_V * p.C_S * p.D_i * math.log2(max(p.D_i, 2))
+    opd = (per_file_keys_o + p.F * p.C_C + dict_term) * p.levels_of(p.m_opd) * p.T
+    return {"plain": plain, "heavy": heavy, "opd": opd}
+
+
+def filter_io(p: CostParams) -> Dict[str, float]:
+    return {
+        "plain": p.m_plain * p.F,
+        "heavy": p.m_heavy * p.F,
+        "opd": p.m_opd * p.F,
+    }
+
+
+def filter_cpu(p: CostParams) -> Dict[str, float]:
+    """The three filter C_CPU expressions of §4.2.2."""
+    shared = p.r * p.N * (p.S_K * p.C_K + (p.S_K + p.S_V) * p.C_C)
+    plain = p.N * p.S_V * p.C_S + shared
+    heavy = p.m_heavy * p.F * p.C_D + p.N * p.S_V * p.C_S + shared
+    dict_lookup = sum(
+        math.log2(max(p.D_i, 2)) * p.S_V * p.C_S for _ in range(p.m_opd)
+    )
+    simd = p.N * p.S_O * p.C_S / p.S_I
+    opd = dict_lookup + simd + shared
+    return {"plain": plain, "heavy": heavy, "opd": opd}
+
+
+def inequality_I1_border(p: CostParams) -> float:
+    """Largest D_i * log2(D_i) for which OPD compaction beats plain."""
+    return (p.F / p.S_V) * (p.S_V - p.S_O) / (p.S_K + p.S_O)
+
+
+def inequality_I1_holds(p: CostParams) -> bool:
+    return p.D_i * math.log2(max(p.D_i, 2)) < inequality_I1_border(p)
+
+
+def border_ndv(p: CostParams) -> int:
+    """Solve D log2 D = border numerically for the critical NDV/file."""
+    lo, hi = 2, 2**40
+    target = inequality_I1_border(p)
+    while lo < hi:
+        mid = (lo + hi) // 2
+        if mid * math.log2(mid) < target:
+            lo = mid + 1
+        else:
+            hi = mid
+    return lo

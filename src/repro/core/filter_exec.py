@@ -1,0 +1,232 @@
+"""Scan-based filter evaluation — paper §4.2.2.
+
+``filtering(Value_{conditions})`` scans every run in every level, finds
+entries whose *value* satisfies the predicate, discards stale versions,
+and returns the qualifying (key, value) pairs.
+
+The OPD fast path (Figure 5):
+  1. predicate -> code range [lo, hi) via two dictionary binary searches
+     (O(log D) string comparisons — the only place strings are touched);
+  2. vectorized compare directly on the encoded column (numpy here; the
+     TPU kernels in ``repro.kernels`` do the same over VMEM tiles, and
+     ``packed_filter`` does it without even unpacking the bit-packed
+     words);
+  3. O(1) decode of the (few) matches: code == offset into the dict;
+  4. cross-level merge discarding stale versions.
+
+Competitor codecs pay what the paper says they pay: 'plain' compares
+S_V-byte strings for every entry; 'heavy' first zlib-decompresses every
+block (C_D x F); 'blob' performs random value addressing in blob files.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.memtable import MemTable
+from repro.core.opd import OPD, Predicate
+from repro.core.sct import SCT, BlobManager
+from repro.core.stats import StageStats
+from repro.storage.io import FileStore
+
+
+def string_mask(values: np.ndarray, pred: Predicate) -> np.ndarray:
+    """Vectorized predicate over raw fixed-width strings (C_S * S_V * N)."""
+    w = values.dtype.itemsize
+    if pred.kind == "eq":
+        return values == np.asarray([pred.a], f"S{w}")[0]
+    if pred.kind == "prefix":
+        lo = np.asarray([pred.a], f"S{w}")[0]
+        hi = np.asarray([pred.a + b"\xff" * (w - len(pred.a))], f"S{w}")[0]
+        return (values >= lo) & (values <= hi)
+    if pred.kind == "range":
+        lo = np.asarray([pred.a], f"S{w}")[0]
+        hi = np.asarray([pred.b], f"S{w}")[0]
+        return (values >= lo) & (values <= hi)
+    if pred.kind == "ge":
+        return values >= np.asarray([pred.a], f"S{w}")[0]
+    if pred.kind == "le":
+        return values <= np.asarray([pred.b], f"S{w}")[0]
+    raise ValueError(pred.kind)
+
+
+@dataclasses.dataclass
+class FilterResult:
+    keys: np.ndarray     # uint64 [k]
+    values: np.ndarray   # S<w>  [k]
+    n_scanned: int
+    n_matched_raw: int   # before stale-version discard
+
+
+def evaluate_filter(
+    runs: List[SCT],
+    memtable: Optional[MemTable],
+    pred: Predicate,
+    *,
+    stats: StageStats,
+    store: FileStore,
+    blob_mgr: Optional[BlobManager] = None,
+    snapshot_seqno: Optional[int] = None,
+    backend: str = "numpy",  # 'numpy' | 'jax' | 'jax_packed'
+) -> FilterResult:
+    snap = np.uint64(snapshot_seqno) if snapshot_seqno is not None else None
+
+    # ---- stage: retrieval (locate candidate files across all levels) ----- #
+    with stats.time("retrieval"):
+        live_runs = [s for s in runs if s.n > 0]
+
+    # ---- stage: read (bulk full-file reads; paper's long-scan path) ------ #
+    with stats.time("read"):
+        for s in live_runs:
+            store.stats.add_read(s.disk_bytes, 1)
+
+    # ---- stage: decode (only competitors pay here) ------------------------ #
+    decoded: List[Optional[np.ndarray]] = [None] * len(live_runs)
+    with stats.time("decode"):
+        for i, s in enumerate(live_runs):
+            if s.codec == "heavy":
+                decoded[i] = s._decompress_all()[2]
+            elif s.codec == "blob":
+                decoded[i] = _read_blob_values(s, blob_mgr)
+
+    # ---- stage: filter (vectorized evaluation) ---------------------------- #
+    cand_keys, cand_seqs, cand_vals = [], [], []
+    n_scanned = 0
+    with stats.time("filter"):
+        for i, s in enumerate(live_runs):
+            n_scanned += s.n
+            if s.codec == "opd":
+                lo, hi = s.opd.code_range(pred)       # O(log D) on strings
+                mask = _code_mask(s, lo, hi, backend)  # vectorized on codes
+            else:
+                vals = s.values if s.codec == "plain" else decoded[i]
+                mask = string_mask(vals, pred) & ~s.tombs
+            if snap is not None:
+                mask = mask & (s.seqnos <= snap)
+            idx = np.nonzero(mask)[0]
+            if idx.shape[0] == 0:
+                continue
+            cand_keys.append(s.keys[idx])
+            cand_seqs.append(s.seqnos[idx])
+            if s.codec == "opd":
+                # O(1) decode: code is the offset into the dictionary
+                cand_vals.append(s.opd.decode(s.evs[idx]))
+            elif s.codec == "plain":
+                cand_vals.append(s.values[idx])
+            else:
+                cand_vals.append(decoded[i][idx])
+        # memtable (newest data) — small, row-oriented scan
+        if memtable is not None and memtable.n_versions:
+            mk, ms, mv = _memtable_matches(memtable, pred, snap)
+            if mk.shape[0]:
+                cand_keys.append(mk)
+                cand_seqs.append(ms)
+                cand_vals.append(mv)
+
+    # ---- stage: merge (discard stale versions across levels) -------------- #
+    with stats.time("merge"):
+        if not cand_keys:
+            w = live_runs[0].value_width if live_runs else 8
+            return FilterResult(np.zeros(0, np.uint64), np.zeros(0, f"S{w}"), n_scanned, 0)
+        keys = np.concatenate(cand_keys)
+        seqs = np.concatenate(cand_seqs)
+        vals = np.concatenate(cand_vals)
+        n_raw = int(keys.shape[0])
+        order = np.lexsort((np.uint64(0xFFFFFFFFFFFFFFFF) - seqs, keys))
+        keys, seqs, vals = keys[order], seqs[order], vals[order]
+        first = np.ones(keys.shape[0], np.bool_)
+        first[1:] = keys[1:] != keys[:-1]
+        keys, seqs, vals = keys[first], seqs[first], vals[first]
+        # shadow check: a candidate only survives if it is the *globally*
+        # newest visible version of its key (a newer non-matching version
+        # or tombstone shadows it).
+        newest = _global_newest(keys, live_runs, memtable, snap)
+        ok = seqs == newest
+        keys, vals = keys[ok], vals[ok]
+
+    return FilterResult(keys, vals, n_scanned, n_raw)
+
+
+# --------------------------------------------------------------------------- #
+def _code_mask(s: SCT, lo: int, hi: int, backend: str) -> np.ndarray:
+    if lo >= hi:
+        return np.zeros(s.n, np.bool_)
+    if backend == "numpy":
+        return (s.evs >= lo) & (s.evs < hi)
+    # JAX / Pallas backends (TPU target; interpret mode on CPU)
+    from repro.kernels import ops as kops
+
+    if backend == "jax":
+        return np.asarray(kops.range_filter_codes(s.evs, lo, hi - 1))[: s.n].astype(bool)
+    if backend == "jax_packed":
+        bitmap = kops.range_filter_packed(s.packed, s.code_bits, lo, hi - 1)
+        return kops.bitmap_to_mask(np.asarray(bitmap), s.code_bits, s.n)
+    raise ValueError(backend)
+
+
+def _read_blob_values(s: SCT, blob_mgr: BlobManager) -> np.ndarray:
+    """BlobDB filter path: random value addressing per entry (paper §5.3)."""
+    out = np.zeros(s.n, f"S{s.value_width}")
+    live = s.vfids >= 0
+    for fid in np.unique(s.vfids[live]):
+        sel = live & (s.vfids == fid)
+        out[sel] = blob_mgr.read_values(int(fid), s.vptrs[sel], random_io=True)
+    return out
+
+
+def _memtable_matches(memtable: MemTable, pred: Predicate, snap) -> Tuple:
+    keys, seqs, vals = [], [], []
+    max_seq = None if snap is None else int(snap)
+    for key in memtable._chains:
+        got = memtable.get(key, max_seq)
+        if got is None or got[1] is None:
+            continue
+        keys.append(key)
+        seqs.append(got[0])
+        vals.append(got[1])
+    w = memtable.value_width
+    if not keys:
+        return np.zeros(0, np.uint64), np.zeros(0, np.uint64), np.zeros(0, f"S{w}")
+    k = np.asarray(keys, np.uint64)
+    sq = np.asarray(seqs, np.uint64)
+    v = np.asarray(vals, f"S{w}")
+    m = string_mask(v, pred)
+    return k[m], sq[m], v[m]
+
+
+def _global_newest(
+    cand_keys: np.ndarray, runs: List[SCT], memtable: Optional[MemTable], snap
+) -> np.ndarray:
+    """Newest visible seqno per candidate key across all runs + memtable.
+
+    §Perf engine hillclimb change 2: runs pinned by an engine snapshot
+    were flushed *before* the snapshot, so every stored seqno <= snap
+    (cached per-SCT ``max_seqno``).  The per-candidate Python correction
+    loop is therefore only needed for exotic externally-built snapshots;
+    the common path is one vectorized searchsorted per run."""
+    newest = np.zeros(cand_keys.shape[0], np.uint64)
+    for s in runs:
+        pos = np.searchsorted(s.keys, cand_keys, side="left")
+        inb = pos < s.n
+        hit = inb & (s.keys[np.minimum(pos, s.n - 1)] == cand_keys)
+        if snap is None or np.uint64(s.max_seqno) <= snap:
+            seq = np.where(hit, s.seqnos[np.minimum(pos, s.n - 1)], 0)
+        else:
+            seq = np.zeros(cand_keys.shape[0], np.uint64)
+            for j in np.nonzero(hit)[0]:
+                p = pos[j]
+                while p < s.n and s.keys[p] == cand_keys[j] and s.seqnos[p] > snap:
+                    p += 1
+                if p < s.n and s.keys[p] == cand_keys[j]:
+                    seq[j] = s.seqnos[p]
+        newest = np.maximum(newest, seq)
+    if memtable is not None:
+        max_seq = None if snap is None else int(snap)
+        for j, k in enumerate(cand_keys):
+            got = memtable.get(int(k), max_seq)
+            if got is not None:
+                newest[j] = max(newest[j], np.uint64(got[0]))
+    return newest

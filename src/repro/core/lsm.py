@@ -1,0 +1,367 @@
+"""LSM-OPD storage engine (paper §3/§4).
+
+Out-of-place ingestion -> memtable -> flush to SCTs (L0, tiered runs with
+a stall limit, per RocksDB and the paper's footnote 1) -> leveling
+compaction into single-sorted-run levels with size ratio T.  Codec is
+pluggable ('opd' | 'plain' | 'heavy' | 'blob') so the paper's four
+competitors share one engine and all benchmark comparisons are
+like-for-like.
+
+MVCC follows the paper's lightweight file-snapshot scheme: a snapshot
+pins (seqno, memtable reference, the set of currently-visible SCTs).
+Compactions install new files; pinned objects stay readable because the
+snapshot holds direct references (immutability does the rest).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.compaction import merge_scts
+from repro.core.filter_exec import FilterResult, evaluate_filter
+from repro.core.iterator import range_scan
+from repro.core.memtable import MemTable
+from repro.core.opd import Predicate
+from repro.core.sct import SCT, BlobManager, build_sct, record_disk_bytes
+from repro.core.stats import StageStats
+from repro.storage.devices import DeviceModel
+from repro.storage.io import FileStore
+
+
+@dataclasses.dataclass(frozen=True)
+class LSMConfig:
+    codec: str = "opd"                 # 'opd' | 'plain' | 'heavy' | 'blob'
+    key_bytes: int = 16                # S_K (paper default 16)
+    value_width: int = 64              # S_V
+    file_bytes: int = 4 * 2**20        # F (paper: 32-64MB; scaled for CI)
+    memtable_bytes: Optional[int] = None
+    size_ratio: int = 10               # T
+    l0_limit: int = 4                  # forced-write-stall limit (footnote 1)
+    block_bytes: int = 4096
+    bloom_bits_per_key: int = 10
+    max_levels: int = 7
+    blob_compress: bool = False        # BlobDB + dictionary compression
+    blob_gc_threshold: float = 0.5
+    filter_backend: str = "numpy"      # 'numpy' | 'jax' | 'jax_packed'
+
+    @property
+    def mem_bytes(self) -> int:
+        return self.memtable_bytes or self.file_bytes
+
+
+@dataclasses.dataclass
+class Snapshot:
+    seqno: int
+    memtable: MemTable
+    runs: List[SCT]
+
+
+class LSMTree:
+    def __init__(self, cfg: LSMConfig, spill_dir: Optional[str] = None):
+        self.cfg = cfg
+        self.store = FileStore(spill_dir)
+        self.blob_mgr = (
+            BlobManager(self.store, cfg.value_width, cfg.blob_compress,
+                        cfg.blob_gc_threshold)
+            if cfg.codec == "blob" else None
+        )
+        self.memtable = MemTable(cfg.value_width, cfg.key_bytes)
+        self.levels: List[List[SCT]] = [[] for _ in range(cfg.max_levels)]
+        self._seqno = 0
+        self._cursors: Dict[int, int] = {}  # round-robin compaction cursors
+        # stats
+        self.compaction_stats = StageStats()
+        self.filter_stats = StageStats()
+        self.flush_stats = StageStats()
+        self.lookup_stats = StageStats()
+        self.n_flushes = 0
+        self.n_compactions = 0
+        self.write_stalls = 0
+        self.stall_seconds = 0.0
+        self.compaction_in_bytes = 0
+        self.compaction_out_bytes = 0
+
+    # ------------------------------------------------------------------ #
+    # geometry
+    # ------------------------------------------------------------------ #
+    @property
+    def file_entries(self) -> int:
+        rec = record_disk_bytes(self.cfg.codec, self.cfg.key_bytes, self.cfg.value_width)
+        return max(256, int(self.cfg.file_bytes / rec))
+
+    def level_bytes(self, i: int) -> int:
+        return sum(s.disk_bytes for s in self.levels[i])
+
+    def level_capacity(self, i: int) -> int:
+        # L1 holds T files; each deeper level is T times larger (leveling).
+        return self.cfg.file_bytes * (self.cfg.size_ratio ** i)
+
+    @property
+    def dict_bytes(self) -> int:
+        """Memory-resident OPD footprint (paper reports <1GB at NDV<=10%)."""
+        return sum(s.dict_nbytes for lvl in self.levels for s in lvl)
+
+    @property
+    def n_files(self) -> int:
+        return sum(len(lvl) for lvl in self.levels)
+
+    @property
+    def disk_bytes(self) -> int:
+        total = sum(s.disk_bytes for lvl in self.levels for s in lvl)
+        if self.blob_mgr is not None:
+            total += sum(self.store.size_of(f) for f in self.blob_mgr.live
+                         if f in self.store._sizes)
+        return total
+
+    def all_runs(self, newest_first: bool = True) -> List[SCT]:
+        """L0 runs newest->oldest, then L1..Ln (sorted, non-overlapping)."""
+        runs = list(self.levels[0])
+        for lvl in self.levels[1:]:
+            runs.extend(lvl)
+        return runs
+
+    # ------------------------------------------------------------------ #
+    # writes
+    # ------------------------------------------------------------------ #
+    def put(self, key: int, value: bytes) -> None:
+        self._seqno += 1
+        self.memtable.put(key, value, self._seqno)
+        self._maybe_flush()
+
+    def put_batch(self, keys: np.ndarray, values: np.ndarray) -> None:
+        """Bulk insertion path for benchmarks (amortizes Python overhead)."""
+        vw = self.cfg.value_width
+        for k, v in zip(keys.tolist(), values):
+            self._seqno += 1
+            self.memtable.put(int(k), bytes(v), self._seqno)
+            if self.memtable.approx_bytes >= self.cfg.mem_bytes:
+                self.flush()
+
+    def delete(self, key: int) -> None:
+        self._seqno += 1
+        self.memtable.delete(key, self._seqno)
+        self._maybe_flush()
+
+    def _maybe_flush(self) -> None:
+        if self.memtable.approx_bytes >= self.cfg.mem_bytes:
+            self.flush()
+
+    def flush(self) -> None:
+        """Freeze + OPD-encode + write to L0; compact if L0 over limit."""
+        if self.memtable.n_versions == 0:
+            return
+        frozen = self.memtable.freeze()
+        self.memtable = MemTable(self.cfg.value_width, self.cfg.key_bytes)
+        fe = self.file_entries
+        with self.flush_stats.time("encode"):
+            new = []
+            for lo in range(0, frozen.n, fe):
+                hi = min(lo + fe, frozen.n)
+                sct = build_sct(
+                    keys=frozen.keys[lo:hi], seqnos=frozen.seqnos[lo:hi],
+                    tombs=frozen.tombs[lo:hi], raw_values=frozen.values[lo:hi],
+                    level=0, codec=self.cfg.codec,
+                    key_bytes=self.cfg.key_bytes, value_width=self.cfg.value_width,
+                    block_bytes=self.cfg.block_bytes,
+                    bloom_bits_per_key=self.cfg.bloom_bits_per_key,
+                    store=self.store, blob_mgr=self.blob_mgr,
+                )
+                new.append(sct)
+        # newest first in L0
+        self.levels[0] = new[::-1] + self.levels[0]
+        self.n_flushes += 1
+        if len(self.levels[0]) > self.cfg.l0_limit:
+            # forced write stall: ingestion waits for L0 compaction
+            self.write_stalls += 1
+            t0 = time.perf_counter()
+            self._compact_l0()
+            self._cascade()
+            self.stall_seconds += time.perf_counter() - t0
+
+    # ------------------------------------------------------------------ #
+    # compaction scheduling (leveling, paper Figure 2)
+    # ------------------------------------------------------------------ #
+    def _is_bottom(self, out_level: int) -> bool:
+        return all(len(self.levels[j]) == 0 for j in range(out_level + 1, self.cfg.max_levels))
+
+    def _compact_l0(self) -> None:
+        inputs = list(self.levels[0])
+        if not inputs:
+            return
+        lo = min(s.min_key for s in inputs)
+        hi = max(s.max_key for s in inputs)
+        overlaps = [s for s in self.levels[1] if s.overlaps(lo, hi)]
+        self._run_merge(inputs + overlaps, out_level=1,
+                        drop_in=[(0, inputs), (1, overlaps)])
+
+    def _cascade(self) -> None:
+        for i in range(1, self.cfg.max_levels - 1):
+            guard = 0
+            while self.level_bytes(i) > self.level_capacity(i) and self.levels[i]:
+                victim = self._pick_victim(i)
+                overlaps = [s for s in self.levels[i + 1]
+                            if s.overlaps(victim.min_key, victim.max_key)]
+                self._run_merge([victim] + overlaps, out_level=i + 1,
+                                drop_in=[(i, [victim]), (i + 1, overlaps)])
+                guard += 1
+                if guard > 64:
+                    break
+
+    def _pick_victim(self, level: int) -> SCT:
+        cur = self._cursors.get(level, 0) % len(self.levels[level])
+        self._cursors[level] = cur + 1
+        return self.levels[level][cur]
+
+    def _run_merge(self, inputs: List[SCT], out_level: int,
+                   drop_in: List[Tuple[int, List[SCT]]]) -> None:
+        res = merge_scts(
+            inputs,
+            out_level=out_level,
+            is_bottom=self._is_bottom(out_level),
+            file_entries=self.file_entries,
+            store=self.store,
+            stats=self.compaction_stats,
+            blob_mgr=self.blob_mgr,
+            block_bytes=self.cfg.block_bytes,
+            bloom_bits_per_key=self.cfg.bloom_bits_per_key,
+        )
+        self.n_compactions += 1
+        self.compaction_in_bytes += sum(s.disk_bytes for s in inputs)
+        self.compaction_out_bytes += sum(s.disk_bytes for s in res.outputs)
+        for lvl, gone in drop_in:
+            ids = {s.file_id for s in gone}
+            self.levels[lvl] = [s for s in self.levels[lvl] if s.file_id not in ids]
+            for s in gone:
+                self.store.delete(s.file_id)
+        merged = self.levels[out_level] + res.outputs
+        merged.sort(key=lambda s: s.min_key)
+        self.levels[out_level] = merged
+        if self.blob_mgr is not None:
+            self._gc_blobs()
+
+    def _gc_blobs(self) -> None:
+        """Rewrite blob files past the garbage threshold (BlobDB GC)."""
+        for fid in self.blob_mgr.gc_candidates():
+            refs = []
+            for lvl in self.levels:
+                for s in lvl:
+                    sel = np.nonzero(s.vfids == fid)[0]
+                    if sel.shape[0]:
+                        refs.append((s, sel))
+            live_n = sum(sel.shape[0] for _, sel in refs)
+            old_size = self.store.size_of(fid)
+            self.store.stats.add_read(old_size, 1)
+            if live_n == 0:
+                self.store.delete(fid)
+                self.blob_mgr.live.pop(fid, None)
+                self.blob_mgr.total.pop(fid, None)
+                continue
+            _, payload, values = self.store._objects[fid]
+            parts = [values[s.vptrs[sel].astype(np.int64)] for s, sel in refs]
+            new_vals = np.concatenate(parts)
+            new_fid, _ = self.blob_mgr.append(new_vals)
+            off = 0
+            for s, sel in refs:
+                s.vfids[sel] = new_fid
+                s.vptrs[sel] = np.arange(off, off + sel.shape[0], dtype=np.uint64)
+                off += sel.shape[0]
+            self.store.delete(fid)
+            self.blob_mgr.live.pop(fid, None)
+            self.blob_mgr.total.pop(fid, None)
+            self.blob_mgr.gc_runs += 1
+            self.blob_mgr.gc_bytes_rewritten += int(new_vals.nbytes)
+
+    # ------------------------------------------------------------------ #
+    # reads
+    # ------------------------------------------------------------------ #
+    def snapshot(self) -> Snapshot:
+        return Snapshot(self._seqno, self.memtable, self.all_runs())
+
+    def get(self, key: int, snapshot: Optional[Snapshot] = None) -> Optional[bytes]:
+        """point_lookup: memtable, then L0 newest->oldest, then L1..Ln."""
+        snap_seq = snapshot.seqno if snapshot else None
+        mem = snapshot.memtable if snapshot else self.memtable
+        with self.lookup_stats.time("lookup"):
+            got = mem.get(key, snap_seq)
+            if got is not None:
+                return got[1]
+            runs = snapshot.runs if snapshot else self.all_runs()
+            k = np.uint64(key)
+            for s in runs:
+                if s.n == 0 or not (s.min_key <= key <= s.max_key):
+                    continue
+                blk, maybe = s.blocks.probe(k)
+                if not maybe:
+                    continue
+                pos = int(np.searchsorted(s.keys, k, side="left"))
+                while pos < s.n and s.keys[pos] == k:
+                    if snap_seq is None or s.seqnos[pos] <= snap_seq:
+                        self.store.stats.add_read(self.cfg.block_bytes, 1)
+                        if s.tombs[pos]:
+                            return None
+                        return self._decode_one(s, pos)
+                    pos += 1
+            return None
+
+    def _decode_one(self, s: SCT, pos: int) -> bytes:
+        if s.codec == "opd":
+            return bytes(s.opd.values[s.evs[pos]])          # O(1) dict offset
+        if s.codec == "plain":
+            return bytes(s.values[pos])
+        if s.codec == "heavy":
+            epb = s.zblock_entries
+            bk, bv = s.decompress_block(pos // epb)          # real zlib
+            return bytes(bv[pos % epb])
+        if s.codec == "blob":
+            v = self.blob_mgr.read_values(int(s.vfids[pos]),
+                                          s.vptrs[pos:pos + 1], random_io=True)
+            return bytes(v[0])
+        raise ValueError(s.codec)
+
+    def range_lookup(self, lo: int, hi: int,
+                     snapshot: Optional[Snapshot] = None) -> Tuple[np.ndarray, np.ndarray]:
+        snap = snapshot or self.snapshot()
+        return range_scan(
+            snap.runs, snap.memtable, lo, hi,
+            stats=self.lookup_stats, store=self.store, blob_mgr=self.blob_mgr,
+            snapshot_seqno=snap.seqno, block_bytes=self.cfg.block_bytes,
+        )
+
+    def filter(self, pred: Predicate,
+               snapshot: Optional[Snapshot] = None) -> FilterResult:
+        snap = snapshot or self.snapshot()
+        return evaluate_filter(
+            snap.runs, snap.memtable, pred,
+            stats=self.filter_stats, store=self.store, blob_mgr=self.blob_mgr,
+            snapshot_seqno=snap.seqno, backend=self.cfg.filter_backend,
+        )
+
+    # ------------------------------------------------------------------ #
+    # reporting
+    # ------------------------------------------------------------------ #
+    def io_report(self, device: DeviceModel) -> Dict[str, float]:
+        st = self.store.stats
+        return {
+            "read_bytes": st.bytes_read,
+            "write_bytes": st.bytes_written,
+            "read_ios": st.read_ios,
+            "write_ios": st.write_ios,
+            "modeled_read_s": device.read_seconds(st.bytes_read, st.read_ios),
+            "modeled_write_s": device.write_seconds(st.bytes_written, st.write_ios),
+        }
+
+    def shape_report(self) -> Dict[str, object]:
+        return {
+            "levels": [len(l) for l in self.levels],
+            "level_bytes": [self.level_bytes(i) for i in range(self.cfg.max_levels)],
+            "n_files": self.n_files,
+            "disk_bytes": self.disk_bytes,
+            "dict_bytes": self.dict_bytes,
+            "n_flushes": self.n_flushes,
+            "n_compactions": self.n_compactions,
+            "write_stalls": self.write_stalls,
+        }

@@ -1,0 +1,118 @@
+"""Memory-resident buffering component (paper §3).
+
+Row-oriented memtable with per-key version chains.  The paper uses a
+lock-free skip-list; the property the rest of the system relies on is
+(i) O(log M)-ish keyed access and (ii) a *sorted snapshot at freeze time*
+(freezing fixes the value domain, turning OPD construction into a sort).
+A hash map + freeze-time sort provides the same interface contract on the
+host; sortedness is only materialized where the paper needs it.
+
+Version chains (newest first) implement the paper's lifetime-interval
+MVCC inside the buffer: a read at snapshot seqno s sees the newest
+version with seqno <= s.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, List, Optional, Tuple
+
+import numpy as np
+
+TOMBSTONE = None  # value sentinel
+
+
+@dataclasses.dataclass
+class FrozenMemtable:
+    """Sorted columnar snapshot: (key asc, seqno desc), all live versions."""
+
+    keys: np.ndarray     # uint64 [n]
+    seqnos: np.ndarray   # uint64 [n]
+    tombs: np.ndarray    # bool   [n]
+    values: np.ndarray   # S<w>   [n]  (b"" rows for tombstones)
+
+    @property
+    def n(self) -> int:
+        return int(self.keys.shape[0])
+
+
+class MemTable:
+    def __init__(self, value_width: int, key_bytes: int = 16):
+        self.value_width = value_width
+        self.key_bytes = key_bytes
+        # key -> list[(seqno, value|None)] newest first
+        self._chains: Dict[int, List[Tuple[int, Optional[bytes]]]] = {}
+        self.approx_bytes = 0
+        self.n_versions = 0
+        self.frozen = False
+
+    # ------------------------------------------------------------------ #
+    def put(self, key: int, value: bytes, seqno: int) -> None:
+        assert not self.frozen, "memtable is frozen"
+        chain = self._chains.setdefault(int(key), [])
+        chain.insert(0, (int(seqno), value))
+        self.approx_bytes += self.key_bytes + 8 + self.value_width
+        self.n_versions += 1
+
+    def delete(self, key: int, seqno: int) -> None:
+        assert not self.frozen, "memtable is frozen"
+        chain = self._chains.setdefault(int(key), [])
+        chain.insert(0, (int(seqno), TOMBSTONE))
+        self.approx_bytes += self.key_bytes + 8
+        self.n_versions += 1
+
+    # ------------------------------------------------------------------ #
+    def get(self, key: int, max_seqno: Optional[int] = None
+            ) -> Optional[Tuple[int, Optional[bytes]]]:
+        """Newest visible (seqno, value|None) or None if key unseen here."""
+        chain = self._chains.get(int(key))
+        if not chain:
+            return None
+        if max_seqno is None:
+            return chain[0]
+        for seqno, value in chain:
+            if seqno <= max_seqno:
+                return seqno, value
+        return None
+
+    def range_items(
+        self, lo: int, hi: int, max_seqno: Optional[int] = None
+    ) -> Iterator[Tuple[int, int, Optional[bytes]]]:
+        """Sorted (key, seqno, value) of newest visible versions in [lo, hi]."""
+        for key in sorted(k for k in self._chains if lo <= k <= hi):
+            got = self.get(key, max_seqno)
+            if got is not None:
+                yield key, got[0], got[1]
+
+    def items_all_versions(self) -> Iterator[Tuple[int, int, Optional[bytes]]]:
+        for key in sorted(self._chains):
+            for seqno, value in self._chains[key]:
+                yield key, seqno, value
+
+    # ------------------------------------------------------------------ #
+    def freeze(self) -> FrozenMemtable:
+        """Freeze + columnarize.  Source domain is now fixed (paper §3)."""
+        self.frozen = True
+        n = self.n_versions
+        keys = np.empty(n, np.uint64)
+        seqnos = np.empty(n, np.uint64)
+        tombs = np.zeros(n, np.bool_)
+        values = np.zeros(n, dtype=f"S{self.value_width}")
+        i = 0
+        for key, seqno, value in self.items_all_versions():
+            keys[i] = key
+            seqnos[i] = seqno
+            if value is TOMBSTONE:
+                tombs[i] = True
+            else:
+                values[i] = value
+            i += 1
+        # items_all_versions yields key asc / seqno desc already.
+        return FrozenMemtable(keys, seqnos, tombs, values)
+
+    @property
+    def n_keys(self) -> int:
+        return len(self._chains)
+
+    def __len__(self) -> int:
+        return self.n_versions

@@ -1,0 +1,223 @@
+"""Order-Preserving Dictionary (OPD) — the paper's core primitive.
+
+An OPD is a bijective, order-preserving map from a *fixed* value domain
+(large fixed-width strings, paper §2) to dense integer codes::
+
+    s_i < s_j  <=>  E(s_i) < E(s_j),     E : S <-> {0 .. m-1}
+
+Key paper observations implemented here:
+
+* **Construction = sorting** (§3, memory-resident buffering component):
+  freezing a memtable fixes the source domain, so building the OPD is a
+  sort + unique over the distinct values; each value is replaced by its
+  rank.  We represent fixed-width string values as numpy ``S<w>`` arrays
+  whose comparison *is* lexicographic byte order, so ``np.unique`` is
+  exactly the paper's "lightweight sorting problem".
+
+* **Merge on dictionaries only** (Algorithm 1): merging the OPDs of n
+  SCTs never touches the value *columns* — the (already sorted) dict
+  arrays are merged (O(sum D_i log sum D_i) string comparisons), and each
+  source dict gets a dense ``remap`` table ``old_code -> new_code`` (the
+  paper's "index table" built from the reverse index), so every encoded
+  entry is rewritten with one O(1) gather.
+
+  *TPU adaptation note*: the paper uses an RBTree (``std::map``) as the
+  reverse index.  Sorted arrays + ``searchsorted`` give the same
+  asymptotics with branch-free, vectorizable access patterns — the
+  idiomatic port for both numpy and TPU (no pointer-chasing structure).
+
+* **Predicate transform** (§4.2.2): a string predicate (prefix / range /
+  equality) becomes a *code range* ``[lo, hi)`` via two binary searches
+  (O(log D)), after which filtering runs directly on the compressed
+  column — see ``repro.kernels`` for the vectorized evaluators.
+
+* **O(1) decode**: a code is the offset of its value in the dict array.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Sequence, Tuple
+
+import numpy as np
+
+
+def as_fixed_bytes(values: Sequence[bytes] | np.ndarray, width: int) -> np.ndarray:
+    """Coerce values to a fixed-width numpy bytes array (dtype ``S<width>``).
+
+    numpy ``S`` comparison is C-string style (trailing NULs ignored), which
+    matches lexicographic order for values that do not contain interior
+    NUL-after-content patterns; the paper's value domain is fixed-size
+    strings so this is faithful.  Supported-domain restriction: values and
+    predicate operands must not contain NUL bytes (shorter values are
+    NUL-padded, so an embedded NUL is indistinguishable from padding).
+    """
+    arr = np.asarray(values, dtype=f"S{width}")
+    return arr
+
+
+@dataclasses.dataclass(frozen=True)
+class Predicate:
+    """A filter predicate over the (string) value domain.
+
+    kind:
+      'eq'      value == a
+      'prefix'  value startswith a          (paper Figure 5's example)
+      'range'   a <= value <= b             (inclusive)
+      'ge'      value >= a
+      'le'      value <= b
+    """
+
+    kind: str
+    a: bytes = b""
+    b: bytes = b""
+
+    def matches(self, value: bytes) -> bool:
+        v = value.rstrip(b"\x00")
+        if self.kind == "eq":
+            return v == self.a
+        if self.kind == "prefix":
+            return v.startswith(self.a)
+        if self.kind == "range":
+            return self.a <= v <= self.b
+        if self.kind == "ge":
+            return v >= self.a
+        if self.kind == "le":
+            return v <= self.b
+        raise ValueError(f"bad predicate kind {self.kind!r}")
+
+
+@dataclasses.dataclass
+class OPD:
+    """values: sorted unique fixed-width byte strings; code i <-> values[i]."""
+
+    values: np.ndarray  # dtype S<w>, sorted ascending, unique
+
+    # ------------------------------------------------------------------ #
+    # construction
+    # ------------------------------------------------------------------ #
+    @staticmethod
+    def build(raw_values: np.ndarray) -> Tuple["OPD", np.ndarray]:
+        """Flush-time construction: sort + unique, codes = ranks.
+
+        Returns (opd, codes[int32]) with ``opd.values[codes] == raw_values``.
+        """
+        uniq, inverse = np.unique(raw_values, return_inverse=True)
+        return OPD(uniq), inverse.astype(np.int32)
+
+    # ------------------------------------------------------------------ #
+    # basic properties
+    # ------------------------------------------------------------------ #
+    @property
+    def size(self) -> int:  # D_i — number of distinct values
+        return int(self.values.shape[0])
+
+    @property
+    def width(self) -> int:  # S_V — value width in bytes
+        return self.values.dtype.itemsize
+
+    @property
+    def code_bits(self) -> int:
+        """Minimal bits per code (paper: log2 m, bit-packed cascading)."""
+        return max(1, int(np.ceil(np.log2(max(self.size, 2)))))
+
+    @property
+    def nbytes(self) -> int:
+        """Memory-resident dictionary footprint."""
+        return int(self.values.nbytes)
+
+    # ------------------------------------------------------------------ #
+    # encode / decode
+    # ------------------------------------------------------------------ #
+    def decode(self, codes: np.ndarray) -> np.ndarray:
+        """O(1) per code — code is the offset into the dict (paper §4.1)."""
+        return self.values[codes]
+
+    def encode(self, raw_values: np.ndarray) -> np.ndarray:
+        """Exact-match lookup; raises if a value is absent from the domain."""
+        raw = np.asarray(raw_values, dtype=self.values.dtype)
+        idx = np.searchsorted(self.values, raw)
+        idx_c = np.clip(idx, 0, self.size - 1)
+        if self.size == 0 or not np.array_equal(self.values[idx_c], raw):
+            raise KeyError("value(s) not present in OPD domain")
+        return idx.astype(np.int32)
+
+    # ------------------------------------------------------------------ #
+    # predicate -> code-range transform (paper §4.2.2, O(log D))
+    # ------------------------------------------------------------------ #
+    def code_range(self, pred: Predicate) -> Tuple[int, int]:
+        """Return [lo, hi) such that pred holds iff lo <= code < hi."""
+        w = self.width
+        vals = self.values
+        if pred.kind == "eq":
+            a = np.asarray([pred.a], dtype=f"S{w}")
+            lo = int(np.searchsorted(vals, a[0], side="left"))
+            hi = int(np.searchsorted(vals, a[0], side="right"))
+            return lo, hi
+        if pred.kind == "prefix":
+            if len(pred.a) == 0:
+                return 0, self.size
+            lo_key = np.asarray([pred.a], dtype=f"S{w}")[0]
+            hi_raw = pred.a + b"\xff" * (w - len(pred.a))
+            hi_key = np.asarray([hi_raw], dtype=f"S{w}")[0]
+            lo = int(np.searchsorted(vals, lo_key, side="left"))
+            hi = int(np.searchsorted(vals, hi_key, side="right"))
+            return lo, hi
+        if pred.kind == "range":
+            lo = int(np.searchsorted(vals, np.asarray([pred.a], f"S{w}")[0], "left"))
+            hi = int(np.searchsorted(vals, np.asarray([pred.b], f"S{w}")[0], "right"))
+            return lo, hi
+        if pred.kind == "ge":
+            lo = int(np.searchsorted(vals, np.asarray([pred.a], f"S{w}")[0], "left"))
+            return lo, self.size
+        if pred.kind == "le":
+            hi = int(np.searchsorted(vals, np.asarray([pred.b], f"S{w}")[0], "right"))
+            return 0, hi
+        raise ValueError(f"bad predicate kind {pred.kind!r}")
+
+    # ------------------------------------------------------------------ #
+    # Algorithm 1 support: dictionary merge + index tables
+    # ------------------------------------------------------------------ #
+    @staticmethod
+    def merge(opds: Sequence["OPD"]) -> Tuple["OPD", List[np.ndarray]]:
+        """Merge n source dictionaries into one dense OPD.
+
+        Returns (new_opd, remaps) where ``remaps[i][old_code] == new_code``
+        for source dictionary i.  Cost: O(sum D_i log sum D_i) string
+        comparisons — entirely on the (lightweight) dictionaries, never on
+        the encoded value columns (the paper's central offloading claim).
+        """
+        if not opds:
+            raise ValueError("need at least one OPD")
+        all_vals = np.concatenate([o.values for o in opds])
+        new_vals = np.unique(all_vals)  # sort + unique == merged dict
+        new = OPD(new_vals)
+        # index table: position of each old dict entry in the new dict.
+        remaps = [np.searchsorted(new_vals, o.values).astype(np.int32) for o in opds]
+        return new, remaps
+
+    @staticmethod
+    def merge_subset(
+        opds: Sequence["OPD"], used: Sequence[np.ndarray]
+    ) -> Tuple["OPD", List[np.ndarray]]:
+        """Merge restricted to codes actually used by an output subsequence.
+
+        ``used[i]`` is a bool mask over source dict i's codes.  This keeps
+        the output dictionary *dense* (Algorithm 1 rebuilds per output SCT
+        so codes stay in [0, D'): required for minimal bit-packing).
+        Unused source codes map to -1 in the remap tables.
+        """
+        subset_vals = [o.values[m] for o, m in zip(opds, used)]
+        if sum(v.shape[0] for v in subset_vals) == 0:
+            return OPD(np.asarray([], dtype=opds[0].values.dtype)), [
+                np.full(o.size, -1, np.int32) for o in opds
+            ]
+        new_vals = np.unique(np.concatenate(subset_vals))
+        new = OPD(new_vals)
+        remaps = []
+        for o, m in zip(opds, used):
+            r = np.full(o.size, -1, np.int32)
+            if m.any():
+                r[m] = np.searchsorted(new_vals, o.values[m]).astype(np.int32)
+            remaps.append(r)
+        return new, remaps

@@ -1,0 +1,58 @@
+"""Per-stage timing — mirrors the paper's seven-stage breakdown.
+
+Paper §1: "a compaction operation comprises of seven stages: file
+retrieval, reading, decoding, merging, filtering, encoding, and writing,
+while a value filtering operation involves the first five stages".
+
+CPU seconds are measured (perf_counter); I/O seconds are *modeled* from
+byte/IO counters by ``storage.devices`` at report time (CPU-only box).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import time
+from collections import defaultdict
+from typing import Dict, Iterator
+
+COMPACTION_STAGES = (
+    "retrieval", "read", "decode", "merge", "filter", "encode", "write",
+)
+
+
+class StageStats:
+    def __init__(self) -> None:
+        self.seconds: Dict[str, float] = defaultdict(float)
+        self.counts: Dict[str, int] = defaultdict(int)
+
+    @contextlib.contextmanager
+    def time(self, stage: str) -> Iterator[None]:
+        t0 = time.perf_counter()
+        try:
+            yield
+        finally:
+            self.seconds[stage] += time.perf_counter() - t0
+            self.counts[stage] += 1
+
+    def add(self, stage: str, seconds: float) -> None:
+        self.seconds[stage] += seconds
+        self.counts[stage] += 1
+
+    def total(self) -> float:
+        return sum(self.seconds.values())
+
+    def merged(self, other: "StageStats") -> "StageStats":
+        out = StageStats()
+        for src in (self, other):
+            for k, v in src.seconds.items():
+                out.seconds[k] += v
+            for k, v in src.counts.items():
+                out.counts[k] += v
+        return out
+
+    def as_dict(self) -> Dict[str, float]:
+        return dict(self.seconds)
+
+    def __repr__(self) -> str:
+        parts = ", ".join(f"{k}={v * 1e3:.2f}ms" for k, v in sorted(self.seconds.items()))
+        return f"StageStats({parts})"

@@ -1,0 +1,6 @@
+# Pallas TPU kernels (validated in interpret mode on CPU) + jnp oracles.
+# opd_filter / packed_filter / bitpack: the paper's SIMD filter pipeline,
+# TPU-native; bloom_probe: batched lookups; ssm_scan: serving recurrence.
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

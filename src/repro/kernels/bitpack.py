@@ -1,0 +1,82 @@
+"""Pallas TPU kernels: k-bit pack/unpack of OPD codes (cascading
+compression, paper §2: "assigning minimal log2 m bits to each symbol").
+
+Layout: codes are grouped per-word along the *sublane* axis —
+``codes[M, per, 128] -> words[M, 128]`` with lane k of words[m, :]
+holding codes[m, k, :].  Shift/or trees run entirely on the VPU; widths
+are power-of-two (see ``core.sct.pack_width``) so fields never straddle
+words (the TPU-friendly restriction adopted in DESIGN.md).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANES = 128
+DEFAULT_BLOCK_ROWS = 128
+
+
+def _pack_kernel(width: int):
+    per = 32 // width
+
+    def kernel(x_ref, out_ref):
+        x = x_ref[...].astype(jnp.uint32)      # [rows, per, 128]
+        acc = jnp.zeros((x.shape[0], LANES), jnp.uint32)
+        for k in range(per):
+            acc = acc | (x[:, k, :] << jnp.uint32(k * width))
+        out_ref[...] = acc
+
+    return kernel
+
+
+def _unpack_kernel(width: int):
+    per = 32 // width
+
+    def kernel(w_ref, out_ref):
+        fmask = jnp.uint32((1 << width) - 1)
+        w = w_ref[...]                          # [rows, 128]
+        cols = [((w >> jnp.uint32(k * width)) & fmask).astype(jnp.int32)
+                for k in range(per)]
+        out_ref[...] = jnp.stack(cols, axis=1)  # [rows, per, 128]
+
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnames=("width", "block_rows", "interpret"))
+def pack_codes_3d(codes: jax.Array, width: int,
+                  block_rows: int = DEFAULT_BLOCK_ROWS, interpret: bool = True):
+    """codes int32 [M, per, 128] -> words uint32 [M, 128]."""
+    per = 32 // width
+    M = codes.shape[0]
+    assert codes.shape == (M, per, LANES) and M % block_rows == 0
+    grid = (M // block_rows,)
+    return pl.pallas_call(
+        _pack_kernel(width),
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_rows, per, LANES), lambda i: (i, 0, 0))],
+        out_specs=pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((M, LANES), jnp.uint32),
+        interpret=interpret,
+    )(codes)
+
+
+@functools.partial(jax.jit, static_argnames=("width", "block_rows", "interpret"))
+def unpack_codes_3d(words: jax.Array, width: int,
+                    block_rows: int = DEFAULT_BLOCK_ROWS, interpret: bool = True):
+    """words uint32 [M, 128] -> codes int32 [M, per, 128]."""
+    per = 32 // width
+    M = words.shape[0]
+    assert words.shape == (M, LANES) and M % block_rows == 0
+    grid = (M // block_rows,)
+    return pl.pallas_call(
+        _unpack_kernel(width),
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_rows, LANES), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((block_rows, per, LANES), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((M, per, LANES), jnp.int32),
+        interpret=interpret,
+    )(words)

@@ -1,0 +1,83 @@
+"""Pallas TPU kernel: batched block-bloom probe.
+
+Probes one block's bloom filter for a batch of keys (the batched
+point-lookup / pipeline prefetch path).  Dynamic per-query gathers are
+lane-hostile on the VPU, so the word select is formulated as a
+broadcast-compare + masked reduction over the (VMEM-resident) bloom
+words — an MXU/VPU-friendly "gather by one-hot" at bloom sizes
+(<= 2048 words = 64 kbit blooms) where the O(W x Q) compare is cheaper
+than a serialized gather.  Same murmur-finalizer hash family as
+``ref.mix32``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.ref import BLOOM_SEEDS32
+
+LANES = 128
+DEFAULT_BLOCK_Q = 8  # query rows per tile -> 8*128 = 1024 keys
+
+
+def _make_kernel(nbits: int, n_hashes: int, w_rows: int):
+    def kernel(bloom_ref, keys_ref, hits_ref):
+        bloom = bloom_ref[...]               # [w_rows, 128] uint32
+        keys = keys_ref[...]                 # [q_rows, 128] uint32
+        hits = jnp.ones(keys.shape, jnp.bool_)
+        # flat word index grid for broadcast-compare
+        widx = (
+            jax.lax.broadcasted_iota(jnp.uint32, (w_rows, LANES), 0) * LANES
+            + jax.lax.broadcasted_iota(jnp.uint32, (w_rows, LANES), 1)
+        )
+        for s in range(n_hashes):
+            x = keys ^ jnp.uint32(BLOOM_SEEDS32[s])
+            x = x ^ (x >> jnp.uint32(16))
+            x = x * jnp.uint32(0x85EBCA6B)
+            x = x ^ (x >> jnp.uint32(13))
+            x = x * jnp.uint32(0xC2B2AE35)
+            x = x ^ (x >> jnp.uint32(16))
+            h = x % jnp.uint32(nbits)
+            target = h >> jnp.uint32(5)      # word index per query
+            bit = h & jnp.uint32(31)
+            # one-hot select of bloom word per query (VPU broadcast-compare)
+            sel = widx[None, :, :, None] == target[:, None, None, :]
+            word = jnp.sum(
+                jnp.where(sel, bloom[None, :, :, None], jnp.uint32(0)),
+                axis=(1, 2),
+            )                                 # [q_rows, 128]
+            hits = hits & (((word >> bit) & jnp.uint32(1)) == jnp.uint32(1))
+        hits_ref[...] = hits.astype(jnp.int8)
+
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnames=("nbits", "n_hashes", "block_q", "interpret"))
+def bloom_probe_2d(
+    bloom_words: jax.Array,   # uint32 [w_rows, 128] (padded bloom)
+    keys32: jax.Array,        # uint32 [q_rows, 128]
+    nbits: int,
+    n_hashes: int = 6,
+    block_q: int = DEFAULT_BLOCK_Q,
+    interpret: bool = True,
+):
+    w_rows = bloom_words.shape[0]
+    q_rows = keys32.shape[0]
+    assert bloom_words.shape[1] == LANES and keys32.shape[1] == LANES
+    assert q_rows % block_q == 0
+    grid = (q_rows // block_q,)
+    return pl.pallas_call(
+        _make_kernel(nbits, n_hashes, w_rows),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((w_rows, LANES), lambda i: (0, 0)),   # whole bloom in VMEM
+            pl.BlockSpec((block_q, LANES), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_q, LANES), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((q_rows, LANES), jnp.int8),
+        interpret=interpret,
+    )(bloom_words, keys32)

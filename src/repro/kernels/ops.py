@@ -1,0 +1,146 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+Handles shape padding to tile boundaries, 1D<->2D lane reshaping, and
+interpret-mode dispatch: on this CPU-only container every kernel runs
+with ``interpret=True`` (the kernel body executes in Python for
+correctness validation); on a real TPU backend the same calls compile to
+Mosaic.  ``INTERPRET`` flips automatically.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import bitpack as _bitpack
+from repro.kernels import bloom_probe as _bloom
+from repro.kernels import opd_filter as _opd_filter
+from repro.kernels import packed_filter as _packed_filter
+from repro.kernels import ssm_scan as _ssm
+
+INTERPRET = jax.default_backend() != "tpu"
+LANES = 128
+
+
+def _pad_rows(x: jax.Array, mult: int, fill) -> jax.Array:
+    rows = x.shape[0]
+    want = ((rows + mult - 1) // mult) * mult
+    if want == rows:
+        return x
+    pad = [(0, want - rows)] + [(0, 0)] * (x.ndim - 1)
+    return jnp.pad(x, pad, constant_values=fill)
+
+
+# --------------------------------------------------------------------------- #
+# opd_filter
+# --------------------------------------------------------------------------- #
+def range_filter_codes(codes, lo: int, hi: int, block_rows: int = 256) -> np.ndarray:
+    """bool mask over a 1D int32 code column: lo <= code <= hi (inclusive)."""
+    codes = jnp.asarray(codes, jnp.int32)
+    n = codes.shape[0]
+    flat = _pad_rows(codes.reshape(-1), LANES * block_rows, -1).reshape(-1, LANES)
+    mask, _ = _opd_filter.range_filter_codes_2d(
+        flat, jnp.int32(lo), jnp.int32(hi),
+        block_rows=block_rows, interpret=INTERPRET)
+    return np.asarray(mask).reshape(-1)[:n].astype(bool)
+
+
+def range_filter_count(codes, lo: int, hi: int, block_rows: int = 256) -> int:
+    codes = jnp.asarray(codes, jnp.int32)
+    flat = _pad_rows(codes.reshape(-1), LANES * block_rows, -1).reshape(-1, LANES)
+    _, counts = _opd_filter.range_filter_codes_2d(
+        flat, jnp.int32(lo), jnp.int32(hi),
+        block_rows=block_rows, interpret=INTERPRET)
+    return int(np.asarray(counts).sum())
+
+
+# --------------------------------------------------------------------------- #
+# packed_filter (direct on compressed words)
+# --------------------------------------------------------------------------- #
+def range_filter_packed(words, width: int, lo: int, hi: int,
+                        block_rows: int = 256) -> np.ndarray:
+    """uint32 bitmap aligned with `words`; bit k of bitmap[i] = predicate of
+    the code packed in field k of words[i]."""
+    words = jnp.asarray(words, jnp.uint32)
+    m = words.shape[0]
+    # pad with all-ones words: field value (2^width - 1) only matches if
+    # hi == 2^width - 1; we slice the bitmap back to m words so padding
+    # never leaks into results.
+    flat = _pad_rows(words.reshape(-1), LANES * block_rows, np.uint32(0xFFFFFFFF))
+    flat = flat.reshape(-1, LANES)
+    bitmap, _ = _packed_filter.range_filter_packed_2d(
+        flat, jnp.uint32(lo), jnp.uint32(hi),
+        width=width, block_rows=block_rows, interpret=INTERPRET)
+    return np.asarray(bitmap).reshape(-1)[:m]
+
+
+def bitmap_to_mask(bitmap: np.ndarray, width: int, n: int) -> np.ndarray:
+    """Expand a packed-filter bitmap to a per-code bool mask of length n."""
+    per = 32 // width
+    bits = np.arange(per, dtype=np.uint32)
+    m = ((bitmap[:, None] >> bits[None, :]) & 1).astype(bool)
+    return m.reshape(-1)[:n]
+
+
+# --------------------------------------------------------------------------- #
+# bitpack
+# --------------------------------------------------------------------------- #
+def pack_codes(codes, width: int, block_rows: int = 128) -> np.ndarray:
+    """int32 codes [n] -> uint32 words [ceil(n / (32/width))].
+
+    Produces the same *linear* word layout as ``core.sct.bitpack`` (word j
+    holds codes j*per .. j*per+per-1), so the engine, the numpy reference
+    and this kernel are interchangeable.  The kernel itself packs along
+    the sublane axis; a host-side permutation maps linear -> tile layout.
+    """
+    per = 32 // width
+    codes = jnp.asarray(codes, jnp.int32)
+    n = codes.shape[0]
+    group = per * LANES
+    flat = _pad_rows(codes, group * block_rows, 0)
+    m = flat.shape[0] // group
+    # linear code index m*LANES*per + l*per + k -> x3[m, k, l]
+    x3 = flat.reshape(m, LANES, per).transpose(0, 2, 1)
+    words = _bitpack.pack_codes_3d(x3, width, block_rows=block_rows,
+                                   interpret=INTERPRET)
+    n_words = (n + per - 1) // per
+    return np.asarray(words).reshape(-1)[:n_words]
+
+
+def unpack_codes(words, width: int, n: int, block_rows: int = 128) -> np.ndarray:
+    per = 32 // width
+    words = jnp.asarray(words, jnp.uint32)
+    flat = _pad_rows(words, LANES * block_rows, 0).reshape(-1, LANES)
+    codes3 = _bitpack.unpack_codes_3d(flat, width, block_rows=block_rows,
+                                      interpret=INTERPRET)
+    # x3[m, k, l] -> linear code index m*LANES*per + l*per + k
+    lin = np.asarray(codes3).transpose(0, 2, 1).reshape(-1)
+    return lin[:n]
+
+
+# --------------------------------------------------------------------------- #
+# bloom probe
+# --------------------------------------------------------------------------- #
+def bloom_probe(bloom_words, nbits: int, keys32, n_hashes: int = 6) -> np.ndarray:
+    """hits bool [Q] for uint32 keys against one bloom (uint32 words)."""
+    keys32 = jnp.asarray(keys32, jnp.uint32)
+    q = keys32.shape[0]
+    bw = jnp.asarray(bloom_words, jnp.uint32)
+    bw = _pad_rows(bw, LANES, 0).reshape(-1, LANES)
+    kq = _pad_rows(keys32, LANES * _bloom.DEFAULT_BLOCK_Q, 0).reshape(-1, LANES)
+    hits = _bloom.bloom_probe_2d(bw, kq, nbits, n_hashes,
+                                 interpret=INTERPRET)
+    return np.asarray(hits).reshape(-1)[:q].astype(bool)
+
+
+# --------------------------------------------------------------------------- #
+# ssm scan
+# --------------------------------------------------------------------------- #
+def ssm_scan(u, delta, A, B, C, chunk: int = 32):
+    """Batched chunked selective scan; see kernels.ssm_scan for layout."""
+    return _ssm.ssm_scan_chunked(
+        jnp.asarray(u), jnp.asarray(delta), jnp.asarray(A),
+        jnp.asarray(B), jnp.asarray(C), chunk=chunk, interpret=INTERPRET)

@@ -1,0 +1,81 @@
+"""Pallas TPU kernel: range filter DIRECTLY on bit-packed code words.
+
+The flagship "direct computing on compressed data" kernel: the OPD code
+column arrives bit-packed (width in {1,2,4,8,16,32} — see
+``core.sct.pack_width``), and the predicate is evaluated by shift/mask
+field extraction *in vector registers*; unpacked codes never exist in
+HBM.  Output is a bitmap aligned with the packed words (bit k of
+bitmap[i] = predicate of the code in lane k of words[i]) plus a per-tile
+count, so downstream gathers read 32x less than a bool mask.
+
+For width=8 this reads 4 codes per uint32 lane: a (256,128) tile holds
+131072 codes in 128 KB — the VMEM analogue of the paper's 16 KB
+L1-resident sliding vector, scaled to TPU memory geometry.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_ROWS = 256
+LANES = 128
+
+
+def _make_kernel(width: int):
+    per = 32 // width
+
+    def kernel(lo_ref, hi_ref, w_ref, bitmap_ref, count_ref):
+        fmask = jnp.uint32((1 << width) - 1)
+        lo = lo_ref[0, 0]
+        hi = hi_ref[0, 0]
+        w = w_ref[...]
+        acc = jnp.zeros_like(w)
+        cnt = jnp.zeros((), jnp.int32)
+        for k in range(per):  # static unroll: per in {1,2,4,8,16,32}
+            v = (w >> jnp.uint32(k * width)) & fmask
+            p = jnp.logical_and(v >= lo, v <= hi)
+            acc = acc | (p.astype(jnp.uint32) << jnp.uint32(k))
+            cnt = cnt + jnp.sum(p.astype(jnp.int32))
+        bitmap_ref[...] = acc
+        count_ref[0, 0] = cnt
+
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnames=("width", "block_rows", "interpret"))
+def range_filter_packed_2d(
+    words: jax.Array,       # uint32 [rows, 128]
+    lo: jax.Array,          # uint32 scalar (inclusive)
+    hi: jax.Array,          # uint32 scalar (inclusive)
+    width: int = 8,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    interpret: bool = True,
+):
+    rows = words.shape[0]
+    assert words.shape[1] == LANES and rows % block_rows == 0, words.shape
+    grid = (rows // block_rows,)
+    lo2 = jnp.asarray(lo, jnp.uint32).reshape(1, 1)
+    hi2 = jnp.asarray(hi, jnp.uint32).reshape(1, 1)
+    bitmap, counts = pl.pallas_call(
+        _make_kernel(width),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((rows, LANES), jnp.uint32),
+            jax.ShapeDtypeStruct((grid[0], 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(lo2, hi2, words)
+    return bitmap, counts

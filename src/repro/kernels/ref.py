@@ -1,0 +1,132 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract).
+
+Each function is the mathematical definition the corresponding kernel in
+this package must reproduce bit-exactly (integer kernels) or to float
+tolerance (ssm_scan).  Property tests sweep shapes/dtypes against these.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# --------------------------------------------------------------------------- #
+# opd_filter: range predicate over a code column
+# --------------------------------------------------------------------------- #
+def range_filter_codes(codes: jax.Array, lo, hi) -> jax.Array:
+    """mask[i] = lo <= codes[i] <= hi  (int32 codes; tombstones are -1 and
+    never match because lo >= 0)."""
+    return jnp.logical_and(codes >= lo, codes <= hi)
+
+
+def range_filter_count(codes: jax.Array, lo, hi) -> jax.Array:
+    return jnp.sum(range_filter_codes(codes, lo, hi).astype(jnp.int32))
+
+
+# --------------------------------------------------------------------------- #
+# bitpack: k-bit packing into uint32 words (k in {1,2,4,8,16,32})
+# --------------------------------------------------------------------------- #
+def pack_codes(codes: jax.Array, width: int) -> jax.Array:
+    """codes int32 [n] (n divisible by 32/width) -> uint32 words [n*width/32].
+    Lane k of a word holds code (word_idx * per + k), little-endian."""
+    per = 32 // width
+    u = codes.astype(jnp.uint32).reshape(-1, per)
+    acc = jnp.zeros(u.shape[0], jnp.uint32)
+    for k in range(per):
+        acc = acc | (u[:, k] << jnp.uint32(k * width))
+    return acc
+
+
+def unpack_codes(words: jax.Array, width: int) -> jax.Array:
+    per = 32 // width
+    mask = jnp.uint32((1 << width) - 1)
+    cols = [(words >> jnp.uint32(k * width)) & mask for k in range(per)]
+    return jnp.stack(cols, axis=1).reshape(-1).astype(jnp.int32)
+
+
+# --------------------------------------------------------------------------- #
+# packed_filter: range predicate evaluated DIRECTLY on packed words
+# --------------------------------------------------------------------------- #
+def range_filter_packed(words: jax.Array, width: int, lo, hi) -> jax.Array:
+    """Returns a uint32 bitmap aligned with `words`: bit k of bitmap[i] is
+    the predicate for the code in lane k of words[i].  Codes never
+    materialize in memory — the paper's 'direct computing on compressed
+    data', one level deeper (on the bit-packed representation)."""
+    per = 32 // width
+    mask = jnp.uint32((1 << width) - 1)
+    lo = jnp.uint32(lo)
+    hi = jnp.uint32(hi)
+    acc = jnp.zeros_like(words)
+    for k in range(per):
+        v = (words >> jnp.uint32(k * width)) & mask
+        p = jnp.logical_and(v >= lo, v <= hi)
+        acc = acc | (p.astype(jnp.uint32) << jnp.uint32(k))
+    return acc
+
+
+# --------------------------------------------------------------------------- #
+# bloom_probe: batched block-bloom membership probe
+# --------------------------------------------------------------------------- #
+BLOOM_SEEDS32 = (0x9E3779B9, 0x85EBCA6B, 0xC2B2AE35, 0x27D4EB2F, 0x165667B1, 0x9E377969)
+
+
+def mix32(x: jax.Array, seed: int) -> jax.Array:
+    """murmur3-style 32-bit finalizer (branch-free, VPU-friendly)."""
+    x = x ^ jnp.uint32(seed)
+    x = x ^ (x >> jnp.uint32(16))
+    x = x * jnp.uint32(0x85EBCA6B)
+    x = x ^ (x >> jnp.uint32(13))
+    x = x * jnp.uint32(0xC2B2AE35)
+    x = x ^ (x >> jnp.uint32(16))
+    return x
+
+
+def bloom_probe(bloom_words: jax.Array, nbits: int, keys32: jax.Array,
+                n_hashes: int = 6) -> jax.Array:
+    """hits[q] = all of n_hashes bloom bits set for key q.
+    bloom_words: uint32 [W] with W*32 >= nbits; keys32: uint32 [Q]."""
+    hits = jnp.ones(keys32.shape[0], jnp.bool_)
+    for s in range(n_hashes):
+        h = mix32(keys32, BLOOM_SEEDS32[s]) % jnp.uint32(nbits)
+        w = (h >> jnp.uint32(5)).astype(jnp.int32)
+        bit = h & jnp.uint32(31)
+        word = bloom_words[w]
+        hits = hits & (((word >> bit) & jnp.uint32(1)) == jnp.uint32(1))
+    return hits
+
+
+# --------------------------------------------------------------------------- #
+# ssm_scan: selective state-space scan (mamba1 recurrence)
+# --------------------------------------------------------------------------- #
+def ssm_scan(u: jax.Array, delta: jax.Array, A: jax.Array, B: jax.Array,
+             C: jax.Array, x0: jax.Array | None = None):
+    """Sequential oracle for the selective scan.
+
+      x_t = exp(delta_t * A) * x_{t-1} + (delta_t * u_t) * B_t
+      y_t = sum_n C_t[n] * x_t[:, n]
+
+    u, delta: [L, D]; A: [D, N]; B, C: [L, N]; x0: [D, N] or None.
+    Returns (y [L, D], x_final [D, N]).  f32 math.
+    """
+    L, D = u.shape
+    N = A.shape[1]
+    x_init = jnp.zeros((D, N), jnp.float32) if x0 is None else x0.astype(jnp.float32)
+
+    def step(x, t):
+        dt = delta[t][:, None]                      # [D, 1]
+        a = jnp.exp(dt * A)                         # [D, N]
+        x = a * x + (dt * u[t][:, None]) * B[t][None, :]
+        y = jnp.sum(x * C[t][None, :], axis=1)      # [D]
+        return x, y
+
+    x_fin, ys = jax.lax.scan(step, x_init, jnp.arange(L))
+    return ys, x_fin
+
+
+def ssm_scan_batched(u, delta, A, B, C, x0=None):
+    """vmapped oracle: u,delta [Bt,L,D]; B,C [Bt,L,N]; x0 [Bt,D,N]|None."""
+    f = lambda uu, dd, bb, cc, xx: ssm_scan(uu, dd, A, bb, cc, xx)
+    if x0 is None:
+        x0 = jnp.zeros((u.shape[0], u.shape[2], A.shape[1]), jnp.float32)
+    return jax.vmap(f)(u, delta, B, C, x0)

@@ -1,0 +1,103 @@
+"""Pallas TPU kernel: chunked selective state-space scan (mamba1).
+
+Serving-path recurrence for the SSM architectures (falcon-mamba-7b,
+hymba-1.5b):
+
+    x_t = exp(delta_t * A) * x_{t-1} + (delta_t * u_t) * B_t
+    y_t = <C_t, x_t>  (contraction over the state dim N)
+
+Grid layout: (batch, D/128, L/chunk).  The last grid axis is sequential
+on a TPU core, so the running state lives in an *output* block whose
+index_map ignores the L axis — the block is revisited across chunk
+steps and stays VMEM-resident (standard Pallas accumulator pattern);
+its final content is the end-of-sequence state, exactly what decode
+needs to continue.  State tile: [128 (D lanes), N] f32.
+
+Within a chunk the recurrence is a fori_loop over time steps on VMEM
+values; D is tiled by 128 lanes, N (=16 for the assigned archs) rides
+the sublane axis of the state tile.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANES = 128
+DEFAULT_CHUNK = 32
+
+
+def _make_kernel(chunk: int, n_state: int):
+    def kernel(u_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, state_ref):
+        li = pl.program_id(2)
+
+        @pl.when(li == 0)
+        def _init():
+            state_ref[...] = jnp.zeros_like(state_ref)
+
+        u = u_ref[0].astype(jnp.float32)        # [chunk, 128]
+        dt = dt_ref[0].astype(jnp.float32)      # [chunk, 128]
+        a = a_ref[...].astype(jnp.float32)      # [128, N]
+        bm = b_ref[0].astype(jnp.float32)       # [chunk, N]
+        cm = c_ref[0].astype(jnp.float32)       # [chunk, N]
+        x = state_ref[0]                        # [128, N] f32
+
+        def step(t, carry):
+            x, ys = carry
+            dt_t = jax.lax.dynamic_index_in_dim(dt, t, 0, False)   # [128]
+            u_t = jax.lax.dynamic_index_in_dim(u, t, 0, False)     # [128]
+            b_t = jax.lax.dynamic_index_in_dim(bm, t, 0, False)    # [N]
+            c_t = jax.lax.dynamic_index_in_dim(cm, t, 0, False)    # [N]
+            decay = jnp.exp(dt_t[:, None] * a)                     # [128, N]
+            x = decay * x + (dt_t * u_t)[:, None] * b_t[None, :]
+            y_t = jnp.sum(x * c_t[None, :], axis=1)                # [128]
+            ys = jax.lax.dynamic_update_index_in_dim(ys, y_t, t, 0)
+            return x, ys
+
+        ys0 = jnp.zeros((chunk, LANES), jnp.float32)
+        x, ys = jax.lax.fori_loop(0, chunk, step, (x, ys0))
+        y_ref[0] = ys
+        state_ref[0] = x
+
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssm_scan_chunked(
+    u: jax.Array,       # [B, L, D] (D % 128 == 0, L % chunk == 0)
+    delta: jax.Array,   # [B, L, D]
+    A: jax.Array,       # [D, N] (negative decay rates)
+    B: jax.Array,       # [B, L, N]
+    C: jax.Array,       # [B, L, N]
+    chunk: int = DEFAULT_CHUNK,
+    interpret: bool = True,
+):
+    """Returns (y [B, L, D] f32, final_state [B, D, N] f32)."""
+    Bt, L, D = u.shape
+    N = A.shape[1]
+    assert D % LANES == 0 and L % chunk == 0, (D, L, chunk)
+    grid = (Bt, D // LANES, L // chunk)
+    y, state = pl.pallas_call(
+        _make_kernel(chunk, N),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, LANES), lambda b, d, l: (b, l, d)),   # u
+            pl.BlockSpec((1, chunk, LANES), lambda b, d, l: (b, l, d)),   # delta
+            pl.BlockSpec((LANES, N), lambda b, d, l: (d, 0)),             # A
+            pl.BlockSpec((1, chunk, N), lambda b, d, l: (b, l, 0)),       # B
+            pl.BlockSpec((1, chunk, N), lambda b, d, l: (b, l, 0)),       # C
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, LANES), lambda b, d, l: (b, l, d)),   # y
+            pl.BlockSpec((1, LANES, N), lambda b, d, l: (b, d, 0)),       # state (revisited over l)
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bt, L, D), jnp.float32),
+            jax.ShapeDtypeStruct((Bt, D, N), jnp.float32),
+        ],
+        interpret=interpret,
+    )(u, delta, A, B, C)
+    return y, state

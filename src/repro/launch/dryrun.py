@@ -1,0 +1,447 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run + roofline extraction.
+
+For every (architecture x input-shape x mesh) cell:
+  1. build the step function (train_step / prefill_step / serve_step),
+  2. jit with explicit in/out shardings on the production mesh,
+  3. ``.lower(**ShapeDtypeStruct inputs).compile()`` — compile success
+     proves the distribution config is coherent (sharding divisibility,
+     collective legality, memory at compile),
+  4. extract roofline terms: FLOPs/bytes from ``compiled.cost_analysis()``
+     (per-partition after SPMD), collective bytes by parsing the
+     post-partitioning HLO for all-gather / all-reduce / reduce-scatter /
+     all-to-all / collective-permute operands (ring-model byte counts),
+  5. write one JSON record per cell (resumable; ``--force`` re-runs).
+
+Hardware model (TPU v5e target): 197 TFLOP/s bf16/chip, 819 GB/s HBM,
+~50 GB/s/link ICI.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch glm4-9b \
+        --shape train_4k --mesh single
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+"""
+
+import argparse
+import dataclasses
+import json
+import re
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import SHAPES, all_archs, applicability, get_config
+from repro.launch.mesh import make_production_mesh
+from repro.models.registry import batch_pspec, build_model, input_specs
+from repro.models.transformer import ShardCtx
+from repro.parallel.sharding import tree_shardings
+from repro.train.optimizer import AdamWConfig, init_opt_state
+from repro.train.train_step import make_train_step, state_specs
+
+# ---- TPU v5e model ---------------------------------------------------------- #
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+ICI_BW = 50e9                # bytes/s / link
+
+COLLECTIVE_RE = re.compile(
+    r"(\w[\w.\-]*)\s*=\s*"                         # result var
+    r"(\([^)]*\)|\S+)\s+"                          # result shape (or tuple)
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", re.IGNORECASE)
+SHAPE_RE = re.compile(r"(pred|s4|s8|s16|s32|s64|u4|u8|u16|u32|u64|f8e4m3fn|"
+                      r"f8e5m2|bf16|f16|f32|f64|c64|c128)\[([\d,]*)\]")
+GROUPS_RE = re.compile(r"replica_groups=(\{\{[^}]*\}[^}]*\}|\[[\d,]+\]<=\[\d+\])")
+
+DTYPE_BYTES = {"pred": 1, "s4": 0.5, "u4": 0.5, "s8": 1, "u8": 1, "s16": 2,
+               "u16": 2, "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4,
+               "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+               "f8e4m3fn": 1, "f8e5m2": 1}
+
+
+def _shape_bytes(text: str) -> float:
+    total = 0.0
+    for dt, dims in SHAPE_RE.findall(text):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = GROUPS_RE.search(line)
+    if not m:
+        return default
+    g = m.group(1)
+    if g.startswith("{"):
+        first = g[2:].split("}", 1)[0]
+        return max(1, first.count(",") + 1)
+    # iota v2: [a,b,...]<=[N] — group size is the product of all dims
+    # except the leading (num_groups) dim.
+    dims = [int(x) for x in g[1:g.index("]")].split(",")]
+    if len(dims) == 1:
+        return dims[0]
+    size = 1
+    for d in dims[1:]:
+        size *= d
+    return size
+
+
+def parse_collectives(hlo_text: str, default_group: int) -> Dict[str, float]:
+    """Ring-model bytes moved per device, by collective kind."""
+    out = {"all-reduce": 0.0, "all-gather": 0.0, "reduce-scatter": 0.0,
+           "all-to-all": 0.0, "collective-permute": 0.0, "count": 0}
+    seen_start = set()
+    for line in hlo_text.splitlines():
+        m = COLLECTIVE_RE.search(line)
+        if not m:
+            continue
+        var, shape_txt, kind = m.group(1), m.group(2), m.group(3).lower()
+        if "-done" in line.split("=")[1][:64]:
+            continue  # count start, skip done
+        key = (var.replace(".start", ""), kind)
+        if key in seen_start:
+            continue
+        seen_start.add(key)
+        nbytes = _shape_bytes(shape_txt)
+        g = _group_size(line, default_group)
+        if g <= 1:
+            continue
+        if kind == "all-gather":
+            moved = nbytes * (g - 1) / g
+        elif kind == "all-reduce":
+            moved = 2.0 * nbytes * (g - 1) / g
+        elif kind == "reduce-scatter":
+            moved = nbytes * (g - 1)          # nbytes = scattered result
+        elif kind == "all-to-all":
+            moved = nbytes * (g - 1) / g
+        else:  # collective-permute
+            moved = nbytes
+        out[kind] += moved
+        out["count"] += 1
+    return out
+
+
+# --------------------------------------------------------------------------- #
+def default_microbatches(cfg, shape) -> int:
+    if shape.kind != "train":
+        return 1
+    per_dp = max(1, shape.global_batch // 16)
+    if cfg.d_model >= 8192:
+        want = 16
+    elif cfg.d_model >= 4096:
+        want = 8
+    else:
+        want = 4
+    n = min(want, per_dp)
+    while shape.global_batch % n:
+        n -= 1
+    return max(1, n)
+
+
+def apply_variant_flags(variant: Dict[str, Any]) -> None:
+    """§Perf knobs: push variant settings into the trace-time flags."""
+    from repro.models import flags
+    flags.decode_gqa = variant.get("decode_gqa", "repeat")
+    flags.moe_impl = variant.get("moe_impl", "gather")
+    flags.remat_policy = variant.get("remat_policy", "nothing")
+    flags.kv_block = int(variant.get("kv_block", 1024))
+    flags.serving_layout = variant.get("serving_layout", "batch")
+    flags.xent_impl = variant.get("xent_impl", "onehot")
+
+
+def build_step(cfg, shape, mesh, variant: Dict[str, Any]):
+    """Returns (jitted_fn, example_inputs(kwargs), donate?) ready to lower."""
+    apply_variant_flags(variant)
+    if variant.get("pad_heads"):
+        # §Perf: pad q-head count to a TP-divisible value so attention can
+        # shard on heads instead of falling back to 'seqq' (which
+        # all-gathers K/V per layer).  Extra heads cost FLOPs but train;
+        # Megatron-style zero-padding would avoid even that.
+        cfg = dataclasses.replace(cfg, n_heads=int(variant["pad_heads"]),
+                                  d_head=cfg.head_dim)
+    model = build_model(cfg)
+    ctx = ShardCtx(mesh)
+    fsdp_over_pod = bool(variant.get("fsdp_over_pod",
+                                     "pod" in mesh.axis_names and cfg.d_model >= 16384))
+    p_layout = ("serve2d" if (shape.kind == "decode"
+                              and variant.get("serving_layout") == "tp2d")
+                else "train")
+    pspecs = model.param_specs(mesh, fsdp_over_pod=fsdp_over_pod,
+                               layout=p_layout)
+    p_shard = tree_shardings(mesh, pspecs)
+    params_shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    inputs = input_specs(cfg, shape)
+    bspecs = batch_pspec(cfg, shape, mesh)
+    b_shard = tree_shardings(mesh, bspecs)
+    scan_impl = variant.get("scan_impl", "seq")
+
+    if shape.kind == "train":
+        opt_cfg = AdamWConfig(moment_dtype=variant.get(
+            "moment_dtype", "bfloat16" if cfg.d_model >= 16384 else "float32"))
+        n_mb = int(variant.get("microbatches", default_microbatches(cfg, shape)))
+        step = make_train_step(model, opt_cfg, mesh, num_microbatches=n_mb,
+                               scan_impl=scan_impl,
+                               grad_compression=variant.get("grad_compression"))
+        sspecs = state_specs(model, mesh, fsdp_over_pod=fsdp_over_pod)
+        s_shard = tree_shardings(mesh, sspecs)
+        state_shapes = {
+            "params": params_shapes,
+            "opt": jax.eval_shape(
+                lambda p: init_opt_state(p, opt_cfg), params_shapes),
+            "step": jax.ShapeDtypeStruct((), jnp.int32),
+        }
+        fn = jax.jit(step, in_shardings=(s_shard, b_shard),
+                     out_shardings=(s_shard, None), donate_argnums=(0,))
+        return fn, (state_shapes, inputs), {"microbatches": n_mb,
+                                            "fsdp_over_pod": fsdp_over_pod}
+
+    if shape.kind == "prefill":
+        def prefill_step(params, batch):
+            return model.prefill(params, batch, ctx)
+        fn = jax.jit(prefill_step, in_shardings=(p_shard, b_shard))
+        return fn, (params_shapes, inputs), {"fsdp_over_pod": fsdp_over_pod}
+
+    if shape.kind == "decode":
+        def serve_step(params, cache, token, pos):
+            return model.decode_step(params, cache, token, pos, ctx)
+        fn = jax.jit(
+            serve_step,
+            in_shardings=(p_shard, b_shard["cache"], b_shard["token"],
+                          NamedSharding(mesh, P())),
+            donate_argnums=(1,),
+        )
+        args = (params_shapes, inputs["cache"], inputs["token"], inputs["pos"])
+        return fn, args, {"fsdp_over_pod": fsdp_over_pod}
+
+    raise ValueError(shape.kind)
+
+
+def model_flops(cfg, shape) -> float:
+    n_total, n_active = cfg.param_count()
+    toks = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    if cfg.enc_dec and shape.kind == "train":
+        from repro.models.encdec import dec_len_for
+        toks = shape.global_batch * (shape.seq_len + dec_len_for(shape.seq_len))
+    if cfg.enc_dec and shape.kind == "prefill":
+        # encoder stack + per-layer cross-attention K/V projections only
+        D, H, dh, F = cfg.d_model, cfg.n_heads, cfg.head_dim, cfg.d_ff
+        n_active = (cfg.n_enc_layers * (4 * D * H * dh + 3 * D * F)
+                    + cfg.n_layers * 2 * D * H * dh)
+    mult = 6.0 if shape.kind == "train" else 2.0
+    return mult * n_active * toks
+
+
+# --------------------------------------------------------------------------- #
+# analysis pass: XLA:CPU cost analysis counts while-loop bodies ONCE, so a
+# rolled L-layer scan under-reports by ~L x n_microbatches.  We therefore
+# measure two fully-UNROLLED lowerings at L=1 and L=2 (single microbatch,
+# chunked ssm scan) and extrapolate linearly:  f(L) = f1 + (L-1)(f2 - f1).
+# FLOPs are exactly linear in L and invariant to microbatching; collective
+# and HBM bytes inside the layer stack are linear in L as well.
+# --------------------------------------------------------------------------- #
+def _analysis_cfg(cfg, L: int):
+    reps = {"n_layers": L}
+    if cfg.enc_dec:
+        reps["n_enc_layers"] = L
+    return dataclasses.replace(cfg, **reps)
+
+
+def _measure_unrolled(cfg, shape, mesh, variant) -> Dict[str, Any]:
+    from repro.models import flags
+    flags.unroll_scans = True
+    try:
+        fn, args, _ = build_step(cfg, shape, mesh, variant)
+        if shape.kind == "decode":
+            lowered = fn.lower(*args)
+        else:
+            lowered = fn.lower(args[0], args[1])
+        compiled = lowered.compile()
+    finally:
+        flags.unroll_scans = False
+    ca = compiled.cost_analysis() or {}
+    coll = parse_collectives(compiled.as_text(),
+                             default_group=mesh.shape["model"])
+    return {
+        "flops": float(ca.get("flops", 0.0)),
+        "bytes": float(ca.get("bytes accessed", 0.0)),
+        "coll": coll,
+    }
+
+
+def analysis_terms(cfg, shape, mesh, variant) -> Dict[str, Any]:
+    """NOTE on microbatches: the 40-cell baseline table was produced with
+    accumulation-free (microbatches=1) analysis lowerings — FLOPs are
+    microbatch-invariant, HBM/collective bytes are therefore best-case.
+    Hillclimb variants that sweep microbatch counts set
+    ``analysis_microbatches`` explicitly so the per-microbatch parameter
+    re-gather traffic becomes visible (see EXPERIMENTS.md §Perf)."""
+    avariant = dict(variant)
+    avariant["microbatches"] = int(variant.get("analysis_microbatches", 1))
+    if cfg.has_ssm and shape.kind != "decode":
+        avariant["scan_impl"] = "chunked"
+    m1 = _measure_unrolled(_analysis_cfg(cfg, 1), shape, mesh, avariant)
+    m2 = _measure_unrolled(_analysis_cfg(cfg, 2), shape, mesh, avariant)
+    L = cfg.n_layers
+
+    def extrap(a, b):
+        return max(0.0, a + (L - 1) * (b - a))
+
+    flops = extrap(m1["flops"], m2["flops"])
+    nbytes = extrap(m1["bytes"], m2["bytes"])
+    coll = {k: (extrap(m1["coll"][k], m2["coll"][k]) if k != "count"
+                else m2["coll"][k])
+            for k in m1["coll"]}
+    return {"flops": flops, "bytes": nbytes, "coll": coll,
+            "l1": m1, "l2": m2}
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str,
+             variant: Dict[str, Any]) -> Dict[str, Any]:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    rec: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+        "kind": shape.kind, "variant": {k: v for k, v in variant.items()},
+        "ok": False,
+    }
+    runnable, reason = applicability(cfg, shape)
+    if not runnable:
+        rec.update(skipped=True, reason=reason, ok=True)
+        return rec
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    chips = int(np.prod(list(mesh.shape.values())))
+    t0 = time.time()
+    fn, args, extra = build_step(cfg, shape, mesh, variant)
+    rec["variant"].update(extra)
+    if isinstance(args, tuple) and len(args) == 2 and isinstance(args[1], dict) \
+            and shape.kind != "decode":
+        lowered = fn.lower(args[0], args[1])
+    else:
+        lowered = fn.lower(*args)
+    rec["lower_s"] = round(time.time() - t0, 2)
+
+    t1 = time.time()
+    compiled = lowered.compile()
+    rec["compile_s"] = round(time.time() - t1, 2)
+
+    # ---- memory ---------------------------------------------------------- #
+    try:
+        ma = compiled.memory_analysis()
+        if ma is not None:
+            rec["memory"] = {
+                k: int(getattr(ma, k))
+                for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                          "temp_size_in_bytes", "generated_code_size_in_bytes")
+                if hasattr(ma, k)
+            }
+            arg_b = rec["memory"].get("argument_size_in_bytes", 0)
+            tmp_b = rec["memory"].get("temp_size_in_bytes", 0)
+            rec["memory"]["per_device_total"] = arg_b + tmp_b
+    except Exception as e:  # CPU backend may not implement it
+        rec["memory_error"] = str(e)
+
+    # ---- cost analysis (raw, rolled — loop bodies counted once) ------------ #
+    ca = compiled.cost_analysis() or {}
+    rec["flops_rolled_raw"] = float(ca.get("flops", 0.0))
+    rec["hlo_bytes"] = len(compiled.as_text())
+
+    # ---- corrected analysis: unrolled L=1/L=2 extrapolation ---------------- #
+    t2 = time.time()
+    ana = analysis_terms(cfg, shape, mesh, variant)
+    rec["analysis_s"] = round(time.time() - t2, 2)
+    flops = ana["flops"]
+    bytes_acc = ana["bytes"]
+    rec["flops_per_device"] = flops
+    rec["bytes_per_device"] = bytes_acc
+    coll = ana["coll"]
+    rec["collectives"] = coll
+    coll_bytes = sum(v for k, v in coll.items() if k != "count")
+
+    # ---- roofline terms ---------------------------------------------------- #
+    compute_s = flops / PEAK_FLOPS
+    memory_s = bytes_acc / HBM_BW
+    collective_s = coll_bytes / ICI_BW
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    rec["terms"] = terms
+    rec["dominant"] = max(terms, key=terms.get)
+    mf = model_flops(cfg, shape)
+    rec["model_flops_total"] = mf
+    rec["model_flops_per_chip"] = mf / chips
+    rec["useful_flop_ratio"] = (mf / chips) / flops if flops else 0.0
+    bound_s = max(terms.values())
+    rec["roofline_frac"] = ((mf / chips) / PEAK_FLOPS) / bound_s if bound_s else 0.0
+    rec["chips"] = chips
+    rec["ok"] = True
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--variant", default="base")
+    ap.add_argument("--set", action="append", default=[],
+                    help="variant overrides, e.g. --set microbatches=4")
+    args = ap.parse_args()
+
+    variant: Dict[str, Any] = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        try:
+            variant[k] = json.loads(v)
+        except json.JSONDecodeError:
+            variant[k] = v
+
+    archs = sorted(all_archs()) if (args.all or args.arch is None) else [args.arch]
+    shapes = sorted(SHAPES) if (args.all or args.shape is None) else [args.shape]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    os.makedirs(args.out, exist_ok=True)
+    for arch in archs:
+        for shape in shapes:
+            for mesh_kind in meshes:
+                tag = f"{arch}__{shape}__{mesh_kind}__{args.variant}"
+                path = os.path.join(args.out, tag + ".json")
+                if os.path.exists(path) and not args.force:
+                    print(f"[skip existing] {tag}")
+                    continue
+                print(f"[dryrun] {tag} ...", flush=True)
+                try:
+                    rec = run_cell(arch, shape, mesh_kind, dict(variant))
+                except Exception:
+                    rec = {"arch": arch, "shape": shape, "mesh": mesh_kind,
+                           "variant": variant, "ok": False,
+                           "error": traceback.format_exc()}
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1)
+                if rec.get("ok"):
+                    if rec.get("skipped"):
+                        print(f"  -> SKIP ({rec['reason']})")
+                    else:
+                        t = rec["terms"]
+                        print(f"  -> ok compile={rec['compile_s']}s "
+                              f"compute={t['compute_s'] * 1e3:.2f}ms "
+                              f"mem={t['memory_s'] * 1e3:.2f}ms "
+                              f"coll={t['collective_s'] * 1e3:.2f}ms "
+                              f"dominant={rec['dominant']} "
+                              f"roofline={rec['roofline_frac']:.3f}")
+                else:
+                    print("  -> FAIL\n" + rec["error"].splitlines()[-1])
+
+
+if __name__ == "__main__":
+    main()

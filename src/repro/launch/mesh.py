@@ -1,0 +1,29 @@
+"""Production mesh builders.
+
+Defined as FUNCTIONS (never module-level constants) so importing this
+module never touches jax device state — the dry-run must set
+XLA_FLAGS before anything initializes the backend.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """(16, 16) single pod / (2, 16, 16) two pods: `model` is the TP/EP
+    axis (matches a v5e pod's 16x16 ICI torus); `data` is DP+FSDP;
+    `pod` extends DP across the DCN."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    import jax.sharding as jsh
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jsh.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh():
+    """Whatever this host has (CPU smoke tests: 1 device)."""
+    import jax.sharding as jsh
+    n = len(jax.devices())
+    return jax.make_mesh((n, 1), ("data", "model"),
+                         axis_types=(jsh.AxisType.Auto,) * 2)

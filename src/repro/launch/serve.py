@@ -1,0 +1,51 @@
+"""Serving launcher: batched greedy decoding with the production decode
+step (the same function the decode_* dry-run cells lower).
+
+    python -m repro.launch.serve --arch hymba-1.5b --reduced --requests 8
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="hymba-1.5b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--max-seq", type=int, default=96)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    args = ap.parse_args()
+
+    from repro.configs.base import get_config
+    from repro.models.registry import build_model
+    from repro.serving.engine import Request, ServingEngine
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    engine = ServingEngine(cfg, params, batch_size=args.batch,
+                           max_seq=args.max_seq)
+    rng = np.random.default_rng(0)
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(1, cfg.vocab, 8).astype(np.int32),
+                    max_new_tokens=args.new_tokens)
+            for i in range(args.requests)]
+    t0 = time.perf_counter()
+    results = engine.run(reqs)
+    dt = time.perf_counter() - t0
+    toks = sum(len(v) for v in results.values())
+    print(f"[serve] {cfg.name}: {len(results)} requests, {toks} tokens, "
+          f"{dt:.2f}s ({toks / dt:.1f} tok/s)")
+
+
+if __name__ == "__main__":
+    main()

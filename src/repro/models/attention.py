@@ -1,0 +1,198 @@
+"""GQA attention: RoPE, causal/sliding-window masks, flash-style chunked
+evaluation for long sequences, and decode against (possibly rolling) KV
+caches.
+
+Sharding contracts (see parallel/sharding.py):
+  * 'head' mode — q/k/v sharded on the head axis over `model`; K/V are
+    GQA-repeated to the q-head count inside this module (repeat of a
+    replicated tensor, so the expansion shards cleanly).
+  * 'seqq' mode — query sequence sharded over `model` (head count not
+    TP-divisible); K/V gathered.
+  * decode — q replicated, KV cache sequence-sharded over `model`; the
+    softmax over the sharded KV axis lowers to activation-sized
+    all-reduces (flash-decode style).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_rope
+
+NEG_INF = -1e30
+
+
+def _mask_bias(pos_q: jax.Array, pos_k: jax.Array, causal: bool,
+               window: int) -> jax.Array:
+    """[B, Sq, Sk] additive bias from position arrays (pos < 0 = invalid)."""
+    pq = pos_q[:, :, None]
+    pk = pos_k[:, None, :]
+    ok = pk >= 0
+    if causal:
+        ok = jnp.logical_and(ok, pq >= pk)
+    if window > 0:
+        ok = jnp.logical_and(ok, pq - pk < window)
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def _repeat_kv(k: jax.Array, n_heads: int) -> jax.Array:
+    hkv = k.shape[2]
+    if hkv == n_heads:
+        return k
+    return jnp.repeat(k, n_heads // hkv, axis=2)
+
+
+# --------------------------------------------------------------------------- #
+# full (materialized-scores) attention — short sequences
+# --------------------------------------------------------------------------- #
+def attention_full(q, k, v, pos_q, pos_k, *, causal: bool = True,
+                   window: int = 0) -> jax.Array:
+    """q [B,Sq,H,dh], k/v [B,Sk,Hkv,dh] -> [B,Sq,H,dh]."""
+    H, dh = q.shape[2], q.shape[3]
+    k = _repeat_kv(k, H)
+    v = _repeat_kv(v, H)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                        preferred_element_type=jnp.float32)
+    scores = scores / jnp.sqrt(jnp.float32(dh))
+    scores = scores + _mask_bias(pos_q, pos_k, causal, window)[:, None]
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
+# --------------------------------------------------------------------------- #
+# flash-style chunked attention — long sequences (prefill/training)
+# --------------------------------------------------------------------------- #
+def attention_flash(q, k, v, pos_q, pos_k, *, causal: bool = True,
+                    window: int = 0, kv_block: int = 1024) -> jax.Array:
+    """Online-softmax scan over KV blocks: O(Sq * kv_block) live memory
+    instead of O(Sq * Sk) materialized scores.  Differentiable (pure jnp
+    scan); used whenever Sk > kv_block."""
+    B, Sq, H, dh = q.shape
+    Sk = k.shape[1]
+    if Sk % kv_block != 0:
+        pad = kv_block - Sk % kv_block
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        pos_k = jnp.pad(pos_k, ((0, 0), (0, pad)), constant_values=-1)
+        Sk += pad
+    k = _repeat_kv(k, H)
+    v = _repeat_kv(v, H)
+    nkv = Sk // kv_block
+    kb = k.reshape(B, nkv, kv_block, H, dh).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(B, nkv, kv_block, H, dh).transpose(1, 0, 2, 3, 4)
+    pkb = pos_k.reshape(B, nkv, kv_block).transpose(1, 0, 2)
+
+    qf = q.astype(jnp.float32)
+    scale = 1.0 / jnp.sqrt(jnp.float32(dh))
+
+    def step(carry, blk):
+        o, m, l = carry                       # [B,Sq,H,dh], [B,H,Sq], [B,H,Sq]
+        kb_i, vb_i, pk_i = blk
+        s = jnp.einsum("bqhd,bkhd->bhqk", qf, kb_i.astype(jnp.float32)) * scale
+        s = s + _mask_bias(pos_q, pk_i, causal, window)[:, None]
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        o_new = (o * corr.transpose(0, 2, 1)[..., None]
+                 + jnp.einsum("bhqk,bkhd->bqhd", p, vb_i.astype(jnp.float32)))
+        return (o_new, m_new, l_new), None
+
+    o0 = jnp.zeros((B, Sq, H, dh), jnp.float32)
+    m0 = jnp.full((B, H, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, H, Sq), jnp.float32)
+    from repro.models import flags
+    (o, m, l), _ = jax.lax.scan(step, (o0, m0, l0), (kb, vb, pkb),
+                                unroll=flags.scan_unroll())
+    o = o / jnp.maximum(l, 1e-30).transpose(0, 2, 1)[..., None]
+    return o.astype(q.dtype)
+
+
+def attention(q, k, v, pos_q, pos_k, *, causal: bool = True, window: int = 0,
+              kv_block: Optional[int] = None,
+              use_flash: Optional[bool] = None) -> jax.Array:
+    if kv_block is None:
+        from repro.models import flags
+        kv_block = flags.kv_block
+    if use_flash is None:
+        use_flash = k.shape[1] > kv_block
+    if use_flash:
+        return attention_flash(q, k, v, pos_q, pos_k, causal=causal,
+                               window=window, kv_block=kv_block)
+    return attention_full(q, k, v, pos_q, pos_k, causal=causal, window=window)
+
+
+# --------------------------------------------------------------------------- #
+# QKV projections
+# --------------------------------------------------------------------------- #
+def qkv_proj(x, p, rope_theta: float, positions) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """x [B,S,D]; p has wq [D,H,dh], wk/wv [D,Hkv,dh]."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(x.dtype))
+    if rope_theta > 0:
+        q = apply_rope(q, positions, rope_theta)
+        k = apply_rope(k, positions, rope_theta)
+    return q, k, v
+
+
+def out_proj(o, p) -> jax.Array:
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(o.dtype))
+
+
+# --------------------------------------------------------------------------- #
+# decode against a (rolling) KV cache
+# --------------------------------------------------------------------------- #
+def decode_attention(q, cache_k, cache_v, cache_pos, *, window: int = 0) -> jax.Array:
+    """q [B,1,H,dh]; cache_k/v [B,Sc,Hkv,dh]; cache_pos [B,Sc] (−1 empty).
+    The rolling cache stores already-roped keys with absolute positions,
+    so ordering within the buffer is irrelevant.
+
+    Two evaluation strategies (flags.decode_gqa):
+      'repeat'  — GQA-repeat K/V to H heads (baseline).  Under a
+                  sequence-sharded cache, XLA reshards the repeated
+                  tensor every step (involuntary remat warning) —
+                  collective-bound.
+      'grouped' — reshape q to [B,1,Hkv,G,dh] and contract against the
+                  raw cache: no repeated tensor exists, the cache keeps
+                  its sequence sharding, and the only collectives are
+                  the activation-sized partial-softmax reductions.
+    """
+    from repro.models import flags
+    B, _, H, dh = q.shape
+    Hkv = cache_k.shape[2]
+    ok = cache_pos >= 0
+    if flags.decode_gqa == "grouped" and H != Hkv:
+        G = H // Hkv
+        qg = q.reshape(B, 1, Hkv, G, dh)
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, cache_k,
+                       preferred_element_type=jnp.float32)
+        s = s / jnp.sqrt(jnp.float32(dh))
+        s = jnp.where(ok[:, None, None, None, :], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1).astype(cache_v.dtype)
+        o = jnp.einsum("bhgqk,bkhd->bqhgd", p, cache_v)
+        return o.reshape(B, 1, H, dh)
+    k = _repeat_kv(cache_k, H)
+    v = _repeat_kv(cache_v, H)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k, preferred_element_type=jnp.float32)
+    s = s / jnp.sqrt(jnp.float32(dh))
+    s = jnp.where(ok[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, v)
+
+
+def cache_update(cache_k, cache_v, cache_pos, new_k, new_v, pos):
+    """Insert one token at slot pos % Sc (rolling for windowed caches)."""
+    Sc = cache_k.shape[1]
+    slot = pos % Sc
+    ck = jax.lax.dynamic_update_slice(cache_k, new_k.astype(cache_k.dtype),
+                                      (0, slot, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache_v, new_v.astype(cache_v.dtype),
+                                      (0, slot, 0, 0))
+    B = cache_pos.shape[0]
+    cp = jax.lax.dynamic_update_slice(
+        cache_pos, jnp.full((B, 1), pos, cache_pos.dtype), (0, slot))
+    return ck, cv, cp

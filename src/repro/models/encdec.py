@@ -1,0 +1,292 @@
+"""Encoder-decoder backbone (whisper-small).
+
+The conv audio frontend is a stub per the assignment: the encoder
+consumes precomputed frame embeddings [B, S_enc, d_model] from
+``input_specs()``.  Sinusoidal positions stand in for Whisper's
+learned/sinusoidal tables (DESIGN.md notes the swap).  The decoder is a
+standard causal LM with per-layer cross-attention over the encoder
+output; decode carries a growing self-attention cache plus static
+cross-attention K/V computed once at prefill.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn_mod
+from repro.models.layers import dense_init, embed_init, rms_norm, sinusoidal_pos, swiglu
+from repro.models.transformer import ShardCtx
+from repro.parallel.sharding import dp_axes, fsdp_axis, safe_spec
+
+# decoder token length = encoder frames / TOKEN_RATIO for train/prefill
+TOKEN_RATIO = 8
+
+
+def dec_len_for(seq_len: int) -> int:
+    return max(16, seq_len // TOKEN_RATIO)
+
+
+def _attn_params(key, L, D, H, dh, dt):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(k1, (L, D, H, dh), D, dt),
+        "wk": dense_init(k2, (L, D, H, dh), D, dt),
+        "wv": dense_init(k3, (L, D, H, dh), D, dt),
+        "wo": dense_init(k4, (L, H, dh, D), H * dh, dt),
+    }
+
+
+def _mlp_params(key, L, D, F, dt):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "wg": dense_init(k1, (L, D, F), D, dt),
+        "wu": dense_init(k2, (L, D, F), D, dt),
+        "wd": dense_init(k3, (L, F, D), F, dt),
+    }
+
+
+def init_params(cfg: ArchConfig, key: jax.Array) -> Dict[str, Any]:
+    dt = jnp.dtype(cfg.dtype)
+    Le, Ld = cfg.n_enc_layers, cfg.n_layers
+    D, F, H, dh = cfg.d_model, cfg.d_ff, cfg.n_heads, cfg.head_dim
+    Vp = cfg.padded_vocab
+    ks = jax.random.split(key, 10)
+    return {
+        "embed": embed_init(ks[0], (Vp, D), dt),
+        "enc_layers": {
+            "attn": _attn_params(ks[1], Le, D, H, dh, dt),
+            "mlp": _mlp_params(ks[2], Le, D, F, dt),
+            "ln1": jnp.ones((Le, D), dt),
+            "ln2": jnp.ones((Le, D), dt),
+        },
+        "dec_layers": {
+            "attn": _attn_params(ks[3], Ld, D, H, dh, dt),
+            "xattn": _attn_params(ks[4], Ld, D, H, dh, dt),
+            "mlp": _mlp_params(ks[5], Ld, D, F, dt),
+            "ln1": jnp.ones((Ld, D), dt),
+            "ln2": jnp.ones((Ld, D), dt),
+            "ln3": jnp.ones((Ld, D), dt),
+        },
+        "enc_norm": jnp.ones((D,), dt),
+        "dec_norm": jnp.ones((D,), dt),
+        "lm_head": embed_init(ks[6], (Vp, D), dt),
+    }
+
+
+def param_specs(cfg: ArchConfig, mesh: Mesh, fsdp_over_pod: bool = False,
+                layout: str = "train"):
+    # whisper-small is ~240M params; the train layout also serves fine
+    # (weights fit one chip), so 'serve2d' is a no-op here.
+    fs = fsdp_axis(mesh, fsdp_over_pod)
+    Le, Ld = cfg.n_enc_layers, cfg.n_layers
+    D, F, H, dh = cfg.d_model, cfg.d_ff, cfg.n_heads, cfg.head_dim
+    Vp = cfg.padded_vocab
+
+    def sp(shape, *axes):
+        return safe_spec(shape, axes, mesh)
+
+    def attn_sp(L):  # whisper: 12 heads, not TP-divisible -> 'seqq' mode
+        return {
+            "wq": sp((L, D, H, dh), None, fs, None, None),
+            "wk": sp((L, D, H, dh), None, fs, None, None),
+            "wv": sp((L, D, H, dh), None, fs, None, None),
+            "wo": sp((L, H, dh, D), None, None, None, fs),
+        }
+
+    def mlp_sp(L):
+        return {
+            "wg": sp((L, D, F), None, fs, "model"),
+            "wu": sp((L, D, F), None, fs, "model"),
+            "wd": sp((L, F, D), None, "model", fs),
+        }
+
+    return {
+        "embed": sp((Vp, D), "model", fs),
+        "enc_layers": {
+            "attn": attn_sp(Le), "mlp": mlp_sp(Le),
+            "ln1": P(None, None), "ln2": P(None, None),
+        },
+        "dec_layers": {
+            "attn": attn_sp(Ld), "xattn": attn_sp(Ld), "mlp": mlp_sp(Ld),
+            "ln1": P(None, None), "ln2": P(None, None), "ln3": P(None, None),
+        },
+        "enc_norm": P(None),
+        "dec_norm": P(None),
+        "lm_head": sp((Vp, D), "model", fs),
+    }
+
+
+# --------------------------------------------------------------------------- #
+# forward
+# --------------------------------------------------------------------------- #
+def encode(params, frames: jax.Array, cfg: ArchConfig, ctx: ShardCtx) -> jax.Array:
+    B, S, D = frames.shape
+    x = frames.astype(jnp.dtype(cfg.dtype)) + sinusoidal_pos(S, D)[None].astype(cfg.dtype)
+    x = ctx.constrain(x, ctx.dp, None, None)
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+
+    def body(x, lp):
+        h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+        h = ctx.constrain(h, ctx.dp, "model", None)
+        q, k, v = attn_mod.qkv_proj(h, lp["attn"], 0.0, pos)
+        o = attn_mod.attention(q, k, v, pos, pos, causal=False)
+        x = x + attn_mod.out_proj(o, lp["attn"])
+        h2 = rms_norm(x, lp["ln2"], cfg.norm_eps)
+        x = x + swiglu(h2, lp["mlp"]["wg"], lp["mlp"]["wu"], lp["mlp"]["wd"])
+        return x, None
+
+    body_fn = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable) \
+        if cfg.remat else body
+    from repro.models import flags
+    x, _ = jax.lax.scan(body_fn, x, params["enc_layers"], unroll=flags.scan_unroll())
+    return rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def decode_train(params, tokens: jax.Array, enc_out: jax.Array,
+                 cfg: ArchConfig, ctx: ShardCtx) -> jax.Array:
+    B, S = tokens.shape
+    D = cfg.d_model
+    dt = jnp.dtype(cfg.dtype)
+    x = jnp.take(params["embed"], tokens, axis=0).astype(dt)
+    x = x + sinusoidal_pos(S, D)[None].astype(dt)
+    x = ctx.constrain(x, ctx.dp, None, None)
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    Se = enc_out.shape[1]
+    pos_e = jnp.broadcast_to(jnp.arange(Se, dtype=jnp.int32)[None], (B, Se))
+
+    def body(x, lp):
+        h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+        q, k, v = attn_mod.qkv_proj(h, lp["attn"], 0.0, pos)
+        o = attn_mod.attention(q, k, v, pos, pos, causal=True)
+        x = x + attn_mod.out_proj(o, lp["attn"])
+        h2 = rms_norm(x, lp["ln2"], cfg.norm_eps)
+        qx = jnp.einsum("bsd,dhk->bshk", h2, lp["xattn"]["wq"].astype(h2.dtype))
+        kx = jnp.einsum("bsd,dhk->bshk", enc_out, lp["xattn"]["wk"].astype(h2.dtype))
+        vx = jnp.einsum("bsd,dhk->bshk", enc_out, lp["xattn"]["wv"].astype(h2.dtype))
+        ox = attn_mod.attention(qx, kx, vx, pos, pos_e, causal=False)
+        x = x + attn_mod.out_proj(ox, lp["xattn"])
+        h3 = rms_norm(x, lp["ln3"], cfg.norm_eps)
+        x = x + swiglu(h3, lp["mlp"]["wg"], lp["mlp"]["wu"], lp["mlp"]["wd"])
+        return x, None
+
+    body_fn = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable) \
+        if cfg.remat else body
+    from repro.models import flags
+    x, _ = jax.lax.scan(body_fn, x, params["dec_layers"], unroll=flags.scan_unroll())
+    x = rms_norm(x, params["dec_norm"], cfg.norm_eps)
+    return jnp.einsum("bsd,vd->bsv", x, params["lm_head"].astype(dt))
+
+
+def lm_loss(params, batch, cfg: ArchConfig, ctx: Optional[ShardCtx] = None,
+            scan_impl: str = "seq"):
+    ctx = ctx or ShardCtx()
+    enc_out = encode(params, batch["frames"], cfg, ctx)
+    logits = decode_train(params, batch["tokens"], enc_out, cfg, ctx)
+    logits = ctx.constrain(logits, ctx.dp, None, "model")
+    from repro.models.transformer import _xent
+    return _xent(logits, batch, jnp.zeros((), jnp.float32), cfg)
+
+
+# --------------------------------------------------------------------------- #
+# serving
+# --------------------------------------------------------------------------- #
+def init_cache(cfg: ArchConfig, batch: int, enc_len: int,
+               dec_len: int = 0) -> Dict[str, Any]:
+    dt = jnp.dtype(cfg.dtype)
+    Ld, H, dh = cfg.n_layers, cfg.n_heads, cfg.head_dim
+    dec_len = dec_len or dec_len_for(enc_len)
+    return {
+        "k": jnp.zeros((Ld, batch, dec_len, H, dh), dt),
+        "v": jnp.zeros((Ld, batch, dec_len, H, dh), dt),
+        "pos": jnp.full((Ld, batch, dec_len), -1, jnp.int32),
+        "xk": jnp.zeros((Ld, batch, enc_len, H, dh), dt),
+        "xv": jnp.zeros((Ld, batch, enc_len, H, dh), dt),
+    }
+
+
+def cache_specs(cfg: ArchConfig, mesh: Mesh, layout: str = "batch"
+                ) -> Dict[str, Any]:
+    dp = dp_axes(mesh)
+    dpa = dp if len(dp) > 1 else dp[0]
+    if layout == "tp2d":
+        both = tuple(dp) + ("model",)
+        return {
+            "k": P(None, None, both, None, None),
+            "v": P(None, None, both, None, None),
+            "pos": P(None, None, both),
+            "xk": P(None, None, both, None, None),
+            "xv": P(None, None, both, None, None),
+        }
+    return {
+        "k": P(None, dpa, "model", None, None),
+        "v": P(None, dpa, "model", None, None),
+        "pos": P(None, dpa, "model"),
+        "xk": P(None, dpa, "model", None, None),
+        "xv": P(None, dpa, "model", None, None),
+    }
+
+
+def decode_step(params, cache, token: jax.Array, pos, cfg: ArchConfig,
+                ctx: Optional[ShardCtx] = None):
+    """One decoder step against self cache + static cross K/V."""
+    ctx = ctx or ShardCtx()
+    dt = jnp.dtype(cfg.dtype)
+    B = token.shape[0]
+    D = cfg.d_model
+    x = jnp.take(params["embed"], token, axis=0).astype(dt)
+    Sd = cache["k"].shape[2]
+    pe = sinusoidal_pos(Sd, D).astype(dt)
+    x = x + jax.lax.dynamic_slice_in_dim(pe, pos % Sd, 1, 0)[None]
+    x = ctx.constrain(x, ctx.dp, None, None)
+
+    def body(x, inp):
+        lp, cache_l = inp
+        new_cache_l = dict(cache_l)
+        posv = jnp.full((B, 1), pos, jnp.int32)
+        h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+        q, k, v = attn_mod.qkv_proj(h, lp["attn"], 0.0, posv)
+        q = ctx.constrain(q, ctx.dp, None, None, None)
+        ck, cv, cp = attn_mod.cache_update(
+            cache_l["k"], cache_l["v"], cache_l["pos"], k, v, pos)
+        o = attn_mod.decode_attention(q, ck, cv, cp)
+        x = x + attn_mod.out_proj(o, lp["attn"])
+        new_cache_l.update(k=ck, v=cv, pos=cp)
+        h2 = rms_norm(x, lp["ln2"], cfg.norm_eps)
+        qx = jnp.einsum("bsd,dhk->bshk", h2, lp["xattn"]["wq"].astype(h2.dtype))
+        qx = ctx.constrain(qx, ctx.dp, None, None, None)
+        Se = cache_l["xk"].shape[1]
+        xpos = jnp.broadcast_to(jnp.arange(Se, dtype=jnp.int32)[None], (B, Se))
+        ox = attn_mod.decode_attention(qx, cache_l["xk"], cache_l["xv"], xpos)
+        x = x + attn_mod.out_proj(ox, lp["xattn"])
+        h3 = rms_norm(x, lp["ln3"], cfg.norm_eps)
+        x = x + swiglu(h3, lp["mlp"]["wg"], lp["mlp"]["wu"], lp["mlp"]["wd"])
+        return x, new_cache_l
+
+    from repro.models import flags
+    x, new_cache = jax.lax.scan(body, x, (params["dec_layers"], cache),
+                                unroll=flags.scan_unroll())
+    x = rms_norm(x, params["dec_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,vd->bsv", x, params["lm_head"].astype(dt))[:, 0]
+    return ctx.constrain(logits, ctx.dp, "model"), new_cache
+
+
+def prefill(params, frames: jax.Array, cfg: ArchConfig,
+            ctx: Optional[ShardCtx] = None):
+    """Encode + fill cross-attention K/V for all decoder layers."""
+    ctx = ctx or ShardCtx()
+    enc_out = encode(params, frames, cfg, ctx)
+
+    def per_layer(lp):
+        kx = jnp.einsum("bsd,dhk->bshk", enc_out,
+                        lp["xattn"]["wk"].astype(enc_out.dtype))
+        vx = jnp.einsum("bsd,dhk->bshk", enc_out,
+                        lp["xattn"]["wv"].astype(enc_out.dtype))
+        return kx, vx
+
+    xk, xv = jax.lax.map(per_layer, params["dec_layers"])
+    return enc_out, xk, xv

@@ -1,0 +1,45 @@
+"""Trace-time switches (set by the dry-run's analysis passes).
+
+``unroll_scans`` — when True every internal lax.scan (layer stack, flash
+KV blocks, SSM chunks, microbatch accumulation) is emitted unrolled.
+XLA:CPU's cost analysis counts a while-loop body once regardless of trip
+count, so the dry-run measures FLOPs/bytes/collectives on small-L
+*unrolled* lowerings and extrapolates (see launch/dryrun.py); production
+lowering keeps rolled scans for compile-time and code-size sanity.
+"""
+
+unroll_scans: bool = False
+
+# ---- §Perf hillclimb knobs (set per dry-run variant) ----------------------- #
+# decode attention: 'repeat' materializes GQA-repeated K/V (baseline; XLA
+# reshards the seq-sharded cache per step); 'grouped' contracts grouped
+# q-heads against the raw cache — no repeated tensor, cache never reshards.
+decode_gqa: str = "repeat"
+# MoE dispatch: 'gather' = global sort-based dispatch under GSPMD (baseline;
+# token gathers over the sharded batch force all-gathers); 'ep' = shard_map
+# expert-parallel dispatch (tokens stay on their data shard, one psum).
+moe_impl: str = "gather"
+# remat policy for the layer scan
+remat_policy: str = "nothing"   # 'nothing' | 'dots'
+# cross-entropy implementation: 'onehot' materializes f32 logits + f32
+# one-hot (baseline); 'fused' keeps logits in bf16 and lets the
+# subtract/exp fuse into the reduction — no [B,S,V] f32 copies in HBM.
+xent_impl: str = "onehot"
+# serving parameter/cache layout: 'batch' = train layout (FSDP over data,
+# batch sharded over data) — pays a per-step parameter all-gather;
+# 'tp2d' = weight-stationary 2D tensor parallelism (weights sharded over
+# BOTH mesh axes, KV cache sequence sharded over both, batch replicated)
+serving_layout: str = "batch"
+# flash attention KV block length
+kv_block: int = 1024
+
+
+def scan_unroll() -> bool | int:
+    return True if unroll_scans else 1
+
+
+def checkpoint_policy():
+    import jax
+    if remat_policy == "dots":
+        return jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    return jax.checkpoint_policies.nothing_saveable

@@ -1,0 +1,168 @@
+"""Mixture-of-Experts FFN with top-k routing and sort-based capacity
+dispatch (expert parallelism over the `model` mesh axis).
+
+Dispatch is the sort/segment formulation (no [T, E, C] one-hot tensors):
+tokens are argsorted by assigned expert, positioned within their
+expert's segment, dropped past capacity, gathered into a dense
+[E, C, D] batch, run through a batched expert FFN (einsum over the
+E-sharded weights), and combined back with router weights.  Gathers and
+scatters are O(T*k); the only big compute is the expert bmm, which
+shards on E.
+
+Aux losses: standard load-balancing loss (mean_e f_e * P_e * E) and
+router z-loss, returned for logging / optimization.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoECfg
+
+
+def moe_ffn(x: jax.Array, p, cfg: MoECfg,
+            dropless: bool = False) -> Tuple[jax.Array, jax.Array]:
+    """x [B,S,D]; p: router [D,E], wg/wu [E,D,F], wd [E,F,D].
+    Returns (y [B,S,D], aux_loss scalar).
+
+    ``dropless=True`` (decode/serving path): capacity = T, which is the
+    worst case (top-k experts per token are distinct), so no token is
+    ever dropped and decode matches the mathematical mixture exactly."""
+    B, S, D = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    T = B * S
+    xt = x.reshape(T, D)
+
+    logits = jnp.einsum("td,de->te", xt, p["router"].astype(x.dtype))
+    logits_f = logits.astype(jnp.float32)
+    probs = jax.nn.softmax(logits_f, axis=-1)                      # [T, E]
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)                  # [T, k]
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+
+    # ---- aux losses ---------------------------------------------------- #
+    me = jnp.mean(probs, axis=0)                                   # P_e
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(gate_idx, E, dtype=jnp.float32), axis=1), axis=0)
+    lb_loss = E * jnp.sum(me * ce)
+    z_loss = jnp.mean(jnp.square(jax.nn.logsumexp(logits_f, axis=-1)))
+    aux = lb_loss + 1e-3 * z_loss
+
+    # ---- sort-based dispatch ------------------------------------------- #
+    if dropless:
+        C = T
+    else:
+        C = int(cfg.capacity_factor * T * k / E + 0.5)
+        C = min(max(4, ((C + 3) // 4) * 4), T)
+    e_flat = gate_idx.reshape(-1)                                  # [T*k]
+    w_flat = gate_vals.reshape(-1).astype(x.dtype)
+    t_flat = jnp.repeat(jnp.arange(T, dtype=jnp.int32), k)
+    order = jnp.argsort(e_flat, stable=True)
+    e_sorted = e_flat[order]
+    counts = jnp.bincount(e_flat, length=E)                        # [E]
+    starts = jnp.concatenate([jnp.zeros(1, counts.dtype), jnp.cumsum(counts)[:-1]])
+    pos_in_e = jnp.arange(T * k, dtype=jnp.int32) - starts[e_sorted].astype(jnp.int32)
+    keep = pos_in_e < C
+    slot = jnp.where(keep, e_sorted * C + pos_in_e, E * C)         # E*C = trash row
+
+    xs = jnp.zeros((E * C + 1, D), x.dtype)
+    xs = xs.at[slot].set(xt[t_flat[order]])
+    xs = xs[: E * C].reshape(E, C, D)
+
+    # ---- expert FFN (E sharded over `model`) ---------------------------- #
+    g = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xs, p["wg"].astype(x.dtype)))
+    u = jnp.einsum("ecd,edf->ecf", xs, p["wu"].astype(x.dtype))
+    ys = jnp.einsum("ecf,efd->ecd", g * u, p["wd"].astype(x.dtype))
+    ys = ys.reshape(E * C, D)
+    ys = jnp.concatenate([ys, jnp.zeros((1, D), ys.dtype)], axis=0)
+
+    # ---- combine -------------------------------------------------------- #
+    contrib = ys[slot] * (w_flat[order] * keep.astype(x.dtype))[:, None]
+    out = jnp.zeros((T, D), x.dtype).at[t_flat[order]].add(contrib)
+    return out.reshape(B, S, D), aux
+
+
+# --------------------------------------------------------------------------- #
+# §Perf variant: shard_map expert parallelism
+# --------------------------------------------------------------------------- #
+def moe_ffn_ep(x: jax.Array, p, cfg: MoECfg, mesh) -> Tuple[jax.Array, jax.Array]:
+    """Expert-parallel dispatch that exploits the layout fact GSPMD cannot
+    see: the token batch is *replicated over `model`* while experts are
+    *sharded over `model`*.  Every model rank therefore already holds all
+    the tokens its experts need — dispatch requires **zero communication**,
+    and combining partial expert outputs is one activation-sized psum over
+    `model` (the same traffic as a TP FFN), instead of the baseline's
+    all-gather of the full [T, D] token matrix per layer.
+
+    Capacity is per (data-shard, expert) rather than global — an accepted
+    semantic shift shared by standard EP implementations (noted in
+    EXPERIMENTS.md §Perf)."""
+    from jax.sharding import PartitionSpec as P
+    from repro.parallel.sharding import dp_axes
+
+    dp = dp_axes(mesh)
+    dpa = dp if len(dp) > 1 else dp[0]
+    E, k = cfg.n_experts, cfg.top_k
+    E_loc = E // mesh.shape["model"]
+
+    def body(x_loc, router, wg, wu, wd):
+        Bl, S, D = x_loc.shape
+        T = Bl * S
+        xt = x_loc.reshape(T, D)
+        logits = jnp.einsum("td,de->te", xt, router.astype(x_loc.dtype))
+        logits_f = logits.astype(jnp.float32)
+        probs = jax.nn.softmax(logits_f, axis=-1)
+        gate_vals, gate_idx = jax.lax.top_k(probs, k)
+        gate_vals = gate_vals / jnp.maximum(
+            jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+        # aux losses on local tokens, averaged over data shards
+        me = jnp.mean(probs, axis=0)
+        ce = jnp.mean(jnp.sum(
+            jax.nn.one_hot(gate_idx, E, dtype=jnp.float32), axis=1), axis=0)
+        aux = E * jnp.sum(me * ce) + 1e-3 * jnp.mean(
+            jnp.square(jax.nn.logsumexp(logits_f, axis=-1)))
+        aux = jax.lax.pmean(aux, dp)
+
+        rank = jax.lax.axis_index("model")
+        e_lo = rank * E_loc
+        C = max(4, int(2.0 * cfg.capacity_factor * T * k / E + 0.5))
+        C = min(C, T)
+        e_flat = gate_idx.reshape(-1)
+        w_flat = gate_vals.reshape(-1).astype(x_loc.dtype)
+        t_flat = jnp.repeat(jnp.arange(T, dtype=jnp.int32), k)
+        e_local = jnp.where(
+            (e_flat >= e_lo) & (e_flat < e_lo + E_loc),
+            e_flat - e_lo, E_loc).astype(jnp.int32)
+        order = jnp.argsort(e_local, stable=True)
+        e_sorted = e_local[order]
+        counts = jnp.bincount(e_local, length=E_loc + 1)
+        starts = jnp.concatenate(
+            [jnp.zeros(1, counts.dtype), jnp.cumsum(counts)[:-1]])
+        pos = jnp.arange(T * k, dtype=jnp.int32) - starts[e_sorted].astype(jnp.int32)
+        keep = (e_sorted < E_loc) & (pos < C)
+        slot = jnp.where(keep, e_sorted * C + pos, E_loc * C)
+        xs = jnp.zeros((E_loc * C + 1, D), x_loc.dtype)
+        xs = xs.at[slot].set(xt[t_flat[order]])
+        xs = xs[: E_loc * C].reshape(E_loc, C, D)
+        g = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xs, wg.astype(x_loc.dtype)))
+        u = jnp.einsum("ecd,edf->ecf", xs, wu.astype(x_loc.dtype))
+        ys = jnp.einsum("ecf,efd->ecd", g * u, wd.astype(x_loc.dtype))
+        ys = ys.reshape(E_loc * C, D)
+        ys = jnp.concatenate([ys, jnp.zeros((1, D), ys.dtype)], axis=0)
+        contrib = ys[slot] * (w_flat[order] * keep.astype(x_loc.dtype))[:, None]
+        y = jnp.zeros((T, D), x_loc.dtype).at[t_flat[order]].add(contrib)
+        y = jax.lax.psum(y, "model")           # combine expert groups
+        return y.reshape(Bl, S, D), aux
+
+    y, aux = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(P(dpa, None, None), P(None, None),
+                  P("model", None, None), P("model", None, None),
+                  P("model", None, None)),
+        out_specs=(P(dpa, None, None), P()),
+        check_vma=False,
+    )(x, p["router"], p["wg"], p["wu"], p["wd"])
+    return y, aux

@@ -1,0 +1,137 @@
+"""Uniform model API over the assigned families + abstract input specs.
+
+`build_model(cfg)` returns a ModelAPI whose functions close over the
+config; `input_specs(cfg, shape)` produces ShapeDtypeStruct stand-ins
+(weak-type-correct, shardable, zero allocation) for every step input —
+the dry-run lowers against these.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeCfg
+from repro.models import encdec, transformer
+from repro.models.transformer import ShardCtx
+from repro.parallel.sharding import dp_axes
+
+
+@dataclasses.dataclass
+class ModelAPI:
+    cfg: ArchConfig
+    init: Callable[[jax.Array], Any]
+    param_specs: Callable[..., Any]
+    loss: Callable[..., Tuple[jax.Array, Dict[str, jax.Array]]]
+    init_cache: Callable[..., Any]
+    cache_specs: Callable[..., Any]
+    decode_step: Callable[..., Tuple[jax.Array, Any]]
+    prefill: Callable[..., Any]
+
+
+def build_model(cfg: ArchConfig) -> ModelAPI:
+    if cfg.enc_dec:
+        return ModelAPI(
+            cfg=cfg,
+            init=lambda key: encdec.init_params(cfg, key),
+            param_specs=lambda mesh, **kw: encdec.param_specs(cfg, mesh, **kw),
+            loss=lambda p, b, ctx=None, scan_impl="seq": encdec.lm_loss(
+                p, b, cfg, ctx, scan_impl),
+            init_cache=lambda batch, seq_len: encdec.init_cache(cfg, batch, seq_len),
+            cache_specs=lambda mesh, layout="batch": encdec.cache_specs(
+                cfg, mesh, layout),
+            decode_step=lambda p, c, t, pos, ctx=None: encdec.decode_step(
+                p, c, t, pos, cfg, ctx),
+            prefill=lambda p, b, ctx=None: encdec.prefill(p, b["frames"], cfg, ctx),
+        )
+    return ModelAPI(
+        cfg=cfg,
+        init=lambda key: transformer.init_params(cfg, key),
+        param_specs=lambda mesh, **kw: transformer.param_specs(cfg, mesh, **kw),
+        loss=lambda p, b, ctx=None, scan_impl="seq": transformer.lm_loss(
+            p, b, cfg, ctx, scan_impl),
+        init_cache=lambda batch, seq_len: transformer.init_cache(cfg, batch, seq_len),
+        cache_specs=lambda mesh, layout="batch": transformer.cache_specs(
+            cfg, mesh, layout),
+        decode_step=lambda p, c, t, pos, ctx=None: transformer.decode_step(
+            p, c, t, pos, cfg, ctx),
+        prefill=lambda p, b, ctx=None, scan_impl="seq": transformer.prefill(
+            p, b["tokens"], cfg, ctx, scan_impl),
+    )
+
+
+# --------------------------------------------------------------------------- #
+# abstract inputs per (arch x shape): the dry-run contract
+# --------------------------------------------------------------------------- #
+def input_specs(cfg: ArchConfig, shape: ShapeCfg) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for the step function's data inputs."""
+    B, S = shape.global_batch, shape.seq_len
+    tok = jnp.int32
+    if shape.kind == "train":
+        if cfg.enc_dec:
+            Sd = encdec.dec_len_for(S)
+            return {
+                "frames": jax.ShapeDtypeStruct((B, S, cfg.d_model), jnp.dtype(cfg.dtype)),
+                "tokens": jax.ShapeDtypeStruct((B, Sd), tok),
+                "labels": jax.ShapeDtypeStruct((B, Sd), tok),
+                "mask": jax.ShapeDtypeStruct((B, Sd), jnp.float32),
+            }
+        return {
+            "tokens": jax.ShapeDtypeStruct((B, S), tok),
+            "labels": jax.ShapeDtypeStruct((B, S), tok),
+            "mask": jax.ShapeDtypeStruct((B, S), jnp.float32),
+        }
+    if shape.kind == "prefill":
+        if cfg.enc_dec:
+            return {"frames": jax.ShapeDtypeStruct((B, S, cfg.d_model),
+                                                   jnp.dtype(cfg.dtype))}
+        return {"tokens": jax.ShapeDtypeStruct((B, S), tok)}
+    if shape.kind == "decode":
+        # one new token against a seq_len-deep cache
+        model = build_model(cfg)
+        cache = jax.eval_shape(lambda: model.init_cache(B, S))
+        return {
+            "cache": cache,
+            "token": jax.ShapeDtypeStruct((B, 1), tok),
+            "pos": jax.ShapeDtypeStruct((), tok),
+        }
+    raise ValueError(shape.kind)
+
+
+def batch_pspec(cfg: ArchConfig, shape: ShapeCfg, mesh: Mesh) -> Dict[str, Any]:
+    """PartitionSpecs matching input_specs (batch over data axes)."""
+    dp = dp_axes(mesh)
+    dpa = dp if len(dp) > 1 else dp[0]
+    B = shape.global_batch
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh.shape[a]
+    bspec = dpa if B % dp_size == 0 and B >= dp_size else None
+    if shape.kind == "train":
+        if cfg.enc_dec:
+            return {"frames": P(bspec, None, None), "tokens": P(bspec, None),
+                    "labels": P(bspec, None), "mask": P(bspec, None)}
+        return {"tokens": P(bspec, None), "labels": P(bspec, None),
+                "mask": P(bspec, None)}
+    if shape.kind == "prefill":
+        if cfg.enc_dec:
+            return {"frames": P(bspec, None, None)}
+        return {"tokens": P(bspec, None)}
+    if shape.kind == "decode":
+        from repro.models import flags
+        model = build_model(cfg)
+        if flags.serving_layout == "tp2d":
+            return {"cache": model.cache_specs(mesh, layout="tp2d"),
+                    "token": P(None, None), "pos": P()}
+        cspecs = model.cache_specs(mesh)
+        if bspec is None:  # batch=1 (long_500k): drop batch sharding
+            cspecs = jax.tree.map(
+                lambda s: P(*(None if ax in (dpa,) or (isinstance(ax, tuple))
+                              else ax for ax in s)),
+                cspecs, is_leaf=lambda s: isinstance(s, P))
+        return {"cache": cspecs, "token": P(bspec, None), "pos": P()}
+    raise ValueError(shape.kind)

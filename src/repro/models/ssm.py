@@ -1,0 +1,166 @@
+"""Mamba1 selective-SSM block (falcon-mamba, hymba's parallel heads).
+
+Training/prefill run the full-sequence selective scan; two
+implementations are provided:
+
+  * 'seq'     — lax.scan over time (baseline; exact, O(L) depth)
+  * 'chunked' — chunk-parallel form: within a chunk the linear
+    recurrence  x_t = a_t x_{t-1} + b_t  is evaluated with
+    jax.lax.associative_scan (log-depth), chunks are stitched by a
+    lax.scan over chunk boundaries.  This is the TPU-friendly layout the
+    Pallas kernel (kernels/ssm_scan.py) implements for serving, exposed
+    here for the training path as a §Perf hillclimb option.
+
+Decode is a single recurrence step carrying (conv_window, ssm_state).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+
+
+def _conv1d_causal(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv: x [B,S,di], w [dk,di], b [di]."""
+    dk = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (dk - 1, 0), (0, 0)))
+    out = jax.lax.conv_general_dilated(
+        xp, w[:, None, :].astype(x.dtype),
+        window_strides=(1,), padding="VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=x.shape[-1],
+    )
+    return out + b.astype(x.dtype)
+
+
+def selective_scan_seq(u, dt, A, Bm, Cm):
+    """u,dt [B,S,di]; A [di,N]; Bm,Cm [B,S,N] -> y [B,S,di] (f32 state)."""
+    B, S, di = u.shape
+
+    def step(x, inp):
+        u_t, dt_t, b_t, c_t = inp                   # [B,di],[B,di],[B,N],[B,N]
+        a = jnp.exp(dt_t[..., None] * A)            # [B,di,N]
+        x = a * x + (dt_t * u_t)[..., None] * b_t[:, None, :]
+        y = jnp.sum(x * c_t[:, None, :], axis=-1)   # [B,di]
+        return x, y
+
+    x0 = jnp.zeros((B, di, A.shape[1]), jnp.float32)
+    xs = (u.astype(jnp.float32).transpose(1, 0, 2),
+          dt.astype(jnp.float32).transpose(1, 0, 2),
+          Bm.astype(jnp.float32).transpose(1, 0, 2),
+          Cm.astype(jnp.float32).transpose(1, 0, 2))
+    _, ys = jax.lax.scan(step, x0, xs)
+    return ys.transpose(1, 0, 2)
+
+
+def selective_scan_chunked(u, dt, A, Bm, Cm, chunk: int = 128):
+    """Chunk-parallel selective scan: associative_scan inside chunks
+    (log-depth on the VPU), sequential lax.scan across chunk boundaries.
+    Identical math to selective_scan_seq."""
+    B, S, di = u.shape
+    N = A.shape[1]
+    if S % chunk != 0:
+        pad = chunk - S % chunk
+        u = jnp.pad(u, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    Sp = u.shape[1]
+    nch = Sp // chunk
+    uf = u.astype(jnp.float32).reshape(B, nch, chunk, di)
+    df = dt.astype(jnp.float32).reshape(B, nch, chunk, di)
+    bf = Bm.astype(jnp.float32).reshape(B, nch, chunk, N)
+    cf = Cm.astype(jnp.float32).reshape(B, nch, chunk, N)
+
+    def chunk_step(x0, inp):
+        u_c, d_c, b_c, c_c = inp                    # [B,chunk,di] / [B,chunk,N]
+        a = jnp.exp(d_c[..., None] * A)             # [B,chunk,di,N]
+        binp = (d_c * u_c)[..., None] * b_c[:, :, None, :]
+
+        def combine(l, r):
+            a_l, b_l = l
+            a_r, b_r = r
+            return a_l * a_r, b_l * a_r + b_r
+
+        a_cum, b_cum = jax.lax.associative_scan(combine, (a, binp), axis=1)
+        xs = a_cum * x0[:, None] + b_cum            # [B,chunk,di,N]
+        y = jnp.sum(xs * c_c[:, :, None, :], axis=-1)
+        return xs[:, -1], y
+
+    x0 = jnp.zeros((B, di, N), jnp.float32)
+    xs_t = (uf.transpose(1, 0, 2, 3), df.transpose(1, 0, 2, 3),
+            bf.transpose(1, 0, 2, 3), cf.transpose(1, 0, 2, 3))
+    from repro.models import flags
+    _, ys = jax.lax.scan(chunk_step, x0, xs_t,
+                         unroll=flags.scan_unroll())  # [nch, B, chunk, di]
+    y = ys.transpose(1, 0, 2, 3).reshape(B, Sp, di)
+    return y[:, :S]
+
+
+def mamba_features(x, p, cfg: ArchConfig):
+    """Shared projections: returns (u, dt, A, Bm, Cm, z)."""
+    ss = cfg.ssm
+    di, N, dtr = cfg.d_inner, ss.d_state, cfg.dt_rank
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"].astype(x.dtype))
+    u, z = jnp.split(xz, 2, axis=-1)
+    u = jax.nn.silu(_conv1d_causal(u, p["conv_w"], p["conv_b"]))
+    x_dbl = jnp.einsum("bse,ef->bsf", u, p["x_proj"].astype(x.dtype))
+    dt_in = x_dbl[..., :dtr]
+    Bm = x_dbl[..., dtr:dtr + N]
+    Cm = x_dbl[..., dtr + N:]
+    dt = jax.nn.softplus(
+        jnp.einsum("bsr,re->bse", dt_in, p["dt_proj"].astype(x.dtype))
+        + p["dt_bias"].astype(x.dtype))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    return u, dt, A, Bm, Cm, z
+
+
+def mamba_block(x, p, cfg: ArchConfig, scan_impl: str = "seq") -> jax.Array:
+    """Full-sequence mamba block (training / prefill)."""
+    u, dt, A, Bm, Cm, z = mamba_features(x, p, cfg)
+    if scan_impl == "chunked":
+        y = selective_scan_chunked(u, dt, A, Bm, Cm)
+    else:
+        y = selective_scan_seq(u, dt, A, Bm, Cm)
+    y = y.astype(x.dtype) + p["D"].astype(x.dtype) * u
+    y = y * jax.nn.silu(z)
+    return jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(x.dtype))
+
+
+# --------------------------------------------------------------------------- #
+# decode (single step)
+# --------------------------------------------------------------------------- #
+def mamba_decode_step(x, p, cfg: ArchConfig, conv_state, ssm_state
+                      ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """x [B,1,D]; conv_state [B,dk-1,di]; ssm_state [B,di,N] (f32).
+    Returns (y [B,1,D], new_conv_state, new_ssm_state)."""
+    ss = cfg.ssm
+    di, N, dtr, dk = cfg.d_inner, ss.d_state, cfg.dt_rank, ss.d_conv
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"].astype(x.dtype))
+    u, z = jnp.split(xz, 2, axis=-1)                 # [B,1,di]
+    # conv over (state window + new sample)
+    win = jnp.concatenate([conv_state, u], axis=1)   # [B,dk,di]
+    w = p["conv_w"].astype(x.dtype)                  # [dk,di]
+    u_c = jnp.sum(win * w[None], axis=1, keepdims=True) + p["conv_b"].astype(x.dtype)
+    u_c = jax.nn.silu(u_c)
+    new_conv = win[:, 1:]
+    x_dbl = jnp.einsum("bse,ef->bsf", u_c, p["x_proj"].astype(x.dtype))
+    dt = jax.nn.softplus(
+        jnp.einsum("bsr,re->bse", x_dbl[..., :dtr], p["dt_proj"].astype(x.dtype))
+        + p["dt_bias"].astype(x.dtype))
+    Bm = x_dbl[..., dtr:dtr + N]
+    Cm = x_dbl[..., dtr + N:]
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    dt_f = dt[:, 0].astype(jnp.float32)              # [B,di]
+    a = jnp.exp(dt_f[..., None] * A)                 # [B,di,N]
+    new_state = a * ssm_state + (dt_f * u_c[:, 0].astype(jnp.float32))[..., None] \
+        * Bm[:, 0].astype(jnp.float32)[:, None, :]
+    y = jnp.sum(new_state * Cm[:, 0].astype(jnp.float32)[:, None, :], axis=-1)
+    y = y[:, None, :].astype(x.dtype) + p["D"].astype(x.dtype) * u_c
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(x.dtype))
+    return out, new_conv, new_state

@@ -1,0 +1,484 @@
+"""Decoder-only LM covering the dense / moe / hybrid / ssm / vlm families.
+
+One parameterized block type; per-family composition:
+  dense|vlm :  x += attn(ln1 x);  x += mlp(ln2 x)
+  moe       :  x += attn(ln1 x);  x += moe(ln2 x)
+  ssm       :  x += mamba(ln1 x)                       (attention-free)
+  hybrid    :  x += (attn(ln1 x) + mamba(ln1 x)) / 2;  x += mlp(ln2 x)
+
+Layers are stacked ([L, ...] leaves) and driven by lax.scan with
+jax.checkpoint (remat) per layer — HLO stays O(1) in depth, activations
+stay O(1) in depth under grad.
+
+`param_specs` mirrors the init structure with PartitionSpecs for the
+(data|pod, model) meshes — TP on heads/FFN/experts/d_inner, ZeRO-3 FSDP
+over `data` (optionally `pod`), vocab-sharded embeddings.  All specs go
+through `safe_spec` so non-divisible dims degrade to replication rather
+than erroring.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn_mod
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import dense_init, embed_init, rms_norm
+from repro.parallel.sharding import attn_mode, dp_axes, fsdp_axis, safe_spec, tp_size
+
+
+@dataclasses.dataclass
+class ShardCtx:
+    """Threaded through forward passes to place activation constraints."""
+    mesh: Optional[Mesh] = None
+    force_dp_none: bool = False   # tp2d serving: batch replicated
+
+    def constrain(self, x, *spec):
+        if self.mesh is None:
+            return x
+        sp = safe_spec(x.shape, spec, self.mesh)
+        return jax.lax.with_sharding_constraint(
+            x, jax.sharding.NamedSharding(self.mesh, sp))
+
+    @property
+    def dp(self):
+        if self.mesh is None or self.force_dp_none:
+            return None
+        axes = dp_axes(self.mesh)
+        return axes if len(axes) > 1 else axes[0]
+
+
+# --------------------------------------------------------------------------- #
+# init
+# --------------------------------------------------------------------------- #
+def init_params(cfg: ArchConfig, key: jax.Array) -> Dict[str, Any]:
+    dt = jnp.dtype(cfg.dtype)
+    L, D, F = cfg.n_layers, cfg.d_model, cfg.d_ff
+    H, Hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    Vp = cfg.padded_vocab
+    keys = jax.random.split(key, 32)
+    ki = iter(keys)
+
+    layers: Dict[str, Any] = {"ln1": jnp.ones((L, D), dt)}
+    if cfg.has_attn:
+        layers["attn"] = {
+            "wq": dense_init(next(ki), (L, D, H, dh), D, dt),
+            "wk": dense_init(next(ki), (L, D, Hkv, dh), D, dt),
+            "wv": dense_init(next(ki), (L, D, Hkv, dh), D, dt),
+            "wo": dense_init(next(ki), (L, H, dh, D), H * dh, dt),
+        }
+    if cfg.moe is not None:
+        E = cfg.moe.n_experts
+        layers["moe"] = {
+            "router": dense_init(next(ki), (L, D, E), D, dt),
+            "wg": dense_init(next(ki), (L, E, D, F), D, dt),
+            "wu": dense_init(next(ki), (L, E, D, F), D, dt),
+            "wd": dense_init(next(ki), (L, E, F, D), F, dt),
+        }
+        layers["ln2"] = jnp.ones((L, D), dt)
+    elif cfg.has_mlp:
+        layers["mlp"] = {
+            "wg": dense_init(next(ki), (L, D, F), D, dt),
+            "wu": dense_init(next(ki), (L, D, F), D, dt),
+            "wd": dense_init(next(ki), (L, F, D), F, dt),
+        }
+        layers["ln2"] = jnp.ones((L, D), dt)
+    if cfg.has_ssm:
+        di, N, dtr, dk = cfg.d_inner, cfg.ssm.d_state, cfg.dt_rank, cfg.ssm.d_conv
+        layers["ssm"] = {
+            "in_proj": dense_init(next(ki), (L, D, 2 * di), D, dt),
+            "conv_w": dense_init(next(ki), (L, dk, di), dk, dt),
+            "conv_b": jnp.zeros((L, di), dt),
+            "x_proj": dense_init(next(ki), (L, di, dtr + 2 * N), di, dt),
+            "dt_proj": dense_init(next(ki), (L, dtr, di), dtr, dt),
+            "dt_bias": jnp.zeros((L, di), dt),
+            "A_log": jnp.log(jnp.broadcast_to(
+                jnp.arange(1, N + 1, dtype=jnp.float32), (L, di, N))).astype(dt),
+            "D": jnp.ones((L, di), dt),
+            "out_proj": dense_init(next(ki), (L, di, D), di, dt),
+        }
+
+    params = {
+        "embed": embed_init(next(ki), (Vp, D), dt),
+        "layers": layers,
+        "final_norm": jnp.ones((D,), dt),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = embed_init(next(ki), (Vp, D), dt)
+    return params
+
+
+# --------------------------------------------------------------------------- #
+# partition specs (mirror init structure)
+# --------------------------------------------------------------------------- #
+def param_specs(cfg: ArchConfig, mesh: Mesh, fsdp_over_pod: bool = False,
+                layout: str = "train") -> Dict[str, Any]:
+    if layout == "serve2d":
+        return param_specs_serve2d(cfg, mesh)
+    fs = fsdp_axis(mesh, fsdp_over_pod)
+    tp = tp_size(mesh)
+    mode = attn_mode(cfg.n_heads, tp) if cfg.has_attn else "none"
+    L, D, F = cfg.n_layers, cfg.d_model, cfg.d_ff
+    H, Hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    Vp = cfg.padded_vocab
+
+    def sp(shape, *axes):
+        return safe_spec(shape, axes, mesh)
+
+    layers: Dict[str, Any] = {"ln1": sp((L, D), None, None)}
+    if cfg.has_attn:
+        if mode == "head":
+            layers["attn"] = {
+                "wq": sp((L, D, H, dh), None, fs, "model", None),
+                "wk": sp((L, D, Hkv, dh), None, fs, None, None),
+                "wv": sp((L, D, Hkv, dh), None, fs, None, None),
+                "wo": sp((L, H, dh, D), None, "model", None, fs),
+            }
+        else:  # 'seqq': weights replicated over model; seq dim shards compute
+            layers["attn"] = {
+                "wq": sp((L, D, H, dh), None, fs, None, None),
+                "wk": sp((L, D, Hkv, dh), None, fs, None, None),
+                "wv": sp((L, D, Hkv, dh), None, fs, None, None),
+                "wo": sp((L, H, dh, D), None, None, None, fs),
+            }
+    if cfg.moe is not None:
+        E = cfg.moe.n_experts
+        layers["moe"] = {
+            "router": sp((L, D, E), None, fs, None),
+            "wg": sp((L, E, D, F), None, "model", fs, None),
+            "wu": sp((L, E, D, F), None, "model", fs, None),
+            "wd": sp((L, E, F, D), None, "model", None, fs),
+        }
+        layers["ln2"] = sp((L, D), None, None)
+    elif cfg.has_mlp:
+        layers["mlp"] = {
+            "wg": sp((L, D, F), None, fs, "model"),
+            "wu": sp((L, D, F), None, fs, "model"),
+            "wd": sp((L, F, D), None, "model", fs),
+        }
+        layers["ln2"] = sp((L, D), None, None)
+    if cfg.has_ssm:
+        di, N, dtr, dk = cfg.d_inner, cfg.ssm.d_state, cfg.dt_rank, cfg.ssm.d_conv
+        layers["ssm"] = {
+            "in_proj": sp((L, D, 2 * di), None, fs, "model"),
+            "conv_w": sp((L, dk, di), None, None, "model"),
+            "conv_b": sp((L, di), None, "model"),
+            "x_proj": sp((L, di, dtr + 2 * N), None, "model", None),
+            "dt_proj": sp((L, dtr, di), None, None, "model"),
+            "dt_bias": sp((L, di), None, "model"),
+            "A_log": sp((L, di, N), None, "model", None),
+            "D": sp((L, di), None, "model"),
+            "out_proj": sp((L, di, D), None, "model", fs),
+        }
+
+    specs = {
+        "embed": sp((Vp, D), "model", fs),
+        "layers": layers,
+        "final_norm": P(None),
+    }
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = sp((Vp, D), "model", fs)
+    return specs
+
+
+def param_specs_serve2d(cfg: ArchConfig, mesh: Mesh) -> Dict[str, Any]:
+    """Weight-stationary serving layout (§Perf): every large weight is
+    sharded over BOTH mesh axes (the 256 chips act as one 16x16 TP
+    grid), the token batch is replicated, and decode collectives are
+    activation-sized partial-sum reductions only — no parameter ever
+    moves after load.  For llama3-405b this is also the only layout
+    whose weights (3.2 GB/chip bf16) + cache (8.4 GB/chip) fit v5e HBM."""
+    L, D, F = cfg.n_layers, cfg.d_model, cfg.d_ff
+    H, Hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    Vp = cfg.padded_vocab
+
+    def sp(shape, *axes):
+        return safe_spec(shape, axes, mesh)
+
+    layers: Dict[str, Any] = {"ln1": sp((L, D), None, None)}
+    if cfg.has_attn:
+        layers["attn"] = {
+            "wq": sp((L, D, H, dh), None, None, "data", "model"),
+            "wk": sp((L, D, Hkv, dh), None, "data", None, "model"),
+            "wv": sp((L, D, Hkv, dh), None, "data", None, "model"),
+            "wo": sp((L, H, dh, D), None, "data", "model", None),
+        }
+    if cfg.moe is not None:
+        E = cfg.moe.n_experts
+        layers["moe"] = {
+            "router": sp((L, D, E), None, "data", None),
+            "wg": sp((L, E, D, F), None, "model", "data", None),
+            "wu": sp((L, E, D, F), None, "model", "data", None),
+            "wd": sp((L, E, F, D), None, "model", None, "data"),
+        }
+        layers["ln2"] = sp((L, D), None, None)
+    elif cfg.has_mlp:
+        layers["mlp"] = {
+            "wg": sp((L, D, F), None, "data", "model"),
+            "wu": sp((L, D, F), None, "data", "model"),
+            "wd": sp((L, F, D), None, "model", "data"),
+        }
+        layers["ln2"] = sp((L, D), None, None)
+    if cfg.has_ssm:
+        di, N, dtr, dk = cfg.d_inner, cfg.ssm.d_state, cfg.dt_rank, cfg.ssm.d_conv
+        layers["ssm"] = {
+            "in_proj": sp((L, D, 2 * di), None, "data", "model"),
+            "conv_w": sp((L, dk, di), None, None, "model"),
+            "conv_b": sp((L, di), None, "model"),
+            "x_proj": sp((L, di, dtr + 2 * N), None, "model", None),
+            "dt_proj": sp((L, dtr, di), None, None, "model"),
+            "dt_bias": sp((L, di), None, "model"),
+            "A_log": sp((L, di, N), None, "model", None),
+            "D": sp((L, di), None, "model"),
+            "out_proj": sp((L, di, D), None, "model", "data"),
+        }
+    specs = {
+        "embed": sp((Vp, D), "model", "data"),
+        "layers": layers,
+        "final_norm": P(None),
+    }
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = sp((Vp, D), "model", "data")
+    return specs
+
+
+# --------------------------------------------------------------------------- #
+# forward (training / prefill)
+# --------------------------------------------------------------------------- #
+def _layer_fwd(x, lp, cfg: ArchConfig, positions, ctx: ShardCtx,
+               scan_impl: str) -> Tuple[jax.Array, jax.Array]:
+    """One block; returns (x, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    mode = attn_mode(cfg.n_heads, ctx.mesh.shape["model"]) if (
+        cfg.has_attn and ctx.mesh is not None) else "head"
+    h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+
+    branch = None
+    if cfg.has_attn:
+        h_attn = ctx.constrain(h, ctx.dp, "model" if mode == "seqq" else None, None)
+        q, k, v = attn_mod.qkv_proj(h_attn, lp["attn"], cfg.rope_theta, positions)
+        if mode == "head":
+            q = ctx.constrain(q, ctx.dp, None, "model", None)
+        else:
+            q = ctx.constrain(q, ctx.dp, "model", None, None)
+            k = ctx.constrain(k, ctx.dp, None, None, None)
+            v = ctx.constrain(v, ctx.dp, None, None, None)
+        o = attn_mod.attention(q, k, v, positions, positions,
+                               causal=True, window=cfg.attn_window)
+        branch = attn_mod.out_proj(o, lp["attn"])
+    if cfg.has_ssm:
+        m = ssm_mod.mamba_block(h, lp["ssm"], cfg, scan_impl)
+        branch = m if branch is None else (branch + m) * 0.5
+    x = x + ctx.constrain(branch, ctx.dp, None, None)
+
+    if cfg.moe is not None:
+        from repro.models import flags
+        h2 = rms_norm(x, lp["ln2"], cfg.norm_eps)
+        if flags.moe_impl == "ep" and ctx.mesh is not None:
+            y, aux = moe_mod.moe_ffn_ep(h2, lp["moe"], cfg.moe, ctx.mesh)
+        else:
+            y, aux = moe_mod.moe_ffn(h2, lp["moe"], cfg.moe)
+        x = x + y
+    elif cfg.has_mlp:
+        h2 = rms_norm(x, lp["ln2"], cfg.norm_eps)
+        from repro.models.layers import swiglu
+        x = x + swiglu(h2, lp["mlp"]["wg"], lp["mlp"]["wu"], lp["mlp"]["wd"])
+    return x, aux
+
+
+def forward(params, tokens: jax.Array, cfg: ArchConfig,
+            ctx: Optional[ShardCtx] = None, scan_impl: str = "seq",
+            positions: Optional[jax.Array] = None) -> Tuple[jax.Array, jax.Array]:
+    """tokens [B,S] -> (logits [B,S,Vp], aux_loss). Scan-over-layers."""
+    ctx = ctx or ShardCtx()
+    B, S = tokens.shape
+    dt = jnp.dtype(cfg.dtype)
+    x = jnp.take(params["embed"], tokens, axis=0).astype(dt)
+    x = ctx.constrain(x, ctx.dp, None, None)
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+
+    def body(carry, lp):
+        x, aux = carry
+        x, a = _layer_fwd(x, lp, cfg, positions, ctx, scan_impl)
+        return (x, aux + a), None
+
+    from repro.models import flags
+    body_fn = body
+    if cfg.remat:
+        body_fn = jax.checkpoint(body, policy=flags.checkpoint_policy())
+    (x, aux), _ = jax.lax.scan(body_fn, (x, jnp.zeros((), jnp.float32)),
+                               params["layers"], unroll=flags.scan_unroll())
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,vd->bsv", x, head.astype(dt))
+    logits = ctx.constrain(logits, ctx.dp, None, "model")
+    return logits, aux
+
+
+def lm_loss(params, batch, cfg: ArchConfig, ctx: Optional[ShardCtx] = None,
+            scan_impl: str = "seq") -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Next-token cross-entropy; batch = {'tokens', 'labels', 'mask'}."""
+    logits, aux = forward(params, batch["tokens"], cfg, ctx, scan_impl)
+    return _xent(logits, batch, aux, cfg)
+
+
+def _xent(logits, batch, aux, cfg) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    from repro.models import flags
+    labels = batch["labels"]
+    mask = batch.get("mask")
+    if flags.xent_impl == "fused":
+        # no [B,S,V] f32 materialization: reductions read bf16 logits
+        # once with f32 accumulation (the subtract/exp fuse in).
+        m = jax.lax.stop_gradient(jnp.max(logits, axis=-1))
+        z = jnp.sum(jnp.exp((logits - m[..., None]).astype(jnp.float32)),
+                    axis=-1)
+        lse = m.astype(jnp.float32) + jnp.log(z)
+        onehot = jax.nn.one_hot(labels, logits.shape[-1], dtype=logits.dtype)
+        gold = jnp.einsum("bsv,bsv->bs", logits, onehot,
+                          preferred_element_type=jnp.float32)
+    else:
+        lf = logits.astype(jnp.float32)
+        lse = jax.nn.logsumexp(lf, axis=-1)
+        onehot = jax.nn.one_hot(labels, logits.shape[-1], dtype=jnp.float32)
+        gold = jnp.sum(lf * onehot, axis=-1)
+    nll = lse - gold
+    if mask is not None:
+        denom = jnp.maximum(jnp.sum(mask), 1.0)
+        loss = jnp.sum(nll * mask) / denom
+    else:
+        loss = jnp.mean(nll)
+    total = loss + 0.01 * aux
+    return total, {"loss": loss, "aux": aux}
+
+
+# --------------------------------------------------------------------------- #
+# serving: cache init / prefill / decode
+# --------------------------------------------------------------------------- #
+def cache_len_for(cfg: ArchConfig, seq_len: int) -> int:
+    if cfg.attn_window > 0:
+        return min(cfg.attn_window, seq_len)
+    return seq_len
+
+
+def init_cache(cfg: ArchConfig, batch: int, seq_len: int) -> Dict[str, Any]:
+    """Abstract-friendly zero cache (decode dry-runs build this with
+    eval_shape).  Layout: leading L so lax.scan threads per-layer slices."""
+    dt = jnp.dtype(cfg.dtype)
+    L = cfg.n_layers
+    cache: Dict[str, Any] = {}
+    if cfg.has_attn:
+        Sc = cache_len_for(cfg, seq_len)
+        Hkv, dh = cfg.n_kv_heads, cfg.head_dim
+        cache["k"] = jnp.zeros((L, batch, Sc, Hkv, dh), dt)
+        cache["v"] = jnp.zeros((L, batch, Sc, Hkv, dh), dt)
+        cache["pos"] = jnp.full((L, batch, Sc), -1, jnp.int32)
+    if cfg.has_ssm:
+        di, N, dk = cfg.d_inner, cfg.ssm.d_state, cfg.ssm.d_conv
+        cache["conv"] = jnp.zeros((L, batch, dk - 1, di), dt)
+        cache["ssm"] = jnp.zeros((L, batch, di, N), jnp.float32)
+    return cache
+
+
+def cache_specs(cfg: ArchConfig, mesh: Mesh, layout: str = "batch"
+                ) -> Dict[str, Any]:
+    """KV cache sharding.
+
+    'batch' — batch over data axes, sequence over model (flash-decode).
+    'tp2d'  — batch replicated, sequence sharded over BOTH axes (pairs
+    with param_specs_serve2d; decode softmax reduces over the sharded
+    sequence with activation-sized collectives)."""
+    dp = dp_axes(mesh)
+    dpa = dp if len(dp) > 1 else dp[0]
+    specs: Dict[str, Any] = {}
+    if layout == "tp2d":
+        both = tuple(dp) + ("model",)
+        if cfg.has_attn:
+            specs["k"] = P(None, None, both, None, None)
+            specs["v"] = P(None, None, both, None, None)
+            specs["pos"] = P(None, None, both)
+        if cfg.has_ssm:
+            specs["conv"] = P(None, None, None, both)
+            specs["ssm"] = P(None, None, both, None)
+        return specs
+    if cfg.has_attn:
+        specs["k"] = P(None, dpa, "model", None, None)
+        specs["v"] = P(None, dpa, "model", None, None)
+        specs["pos"] = P(None, dpa, "model")
+    if cfg.has_ssm:
+        specs["conv"] = P(None, dpa, None, "model")
+        specs["ssm"] = P(None, dpa, "model", None)
+    return specs
+
+
+def _layer_decode(x, lp, cache_l, pos, cfg: ArchConfig, ctx: ShardCtx):
+    """x [B,1,D]; cache_l = per-layer cache slice (no leading L)."""
+    new_cache = dict(cache_l)
+    h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+    branch = None
+    if cfg.has_attn:
+        B = x.shape[0]
+        posv = jnp.full((B, 1), pos, jnp.int32)
+        q, k, v = attn_mod.qkv_proj(h, lp["attn"], cfg.rope_theta, posv)
+        q = ctx.constrain(q, ctx.dp, None, None, None)   # replicate over model
+        ck, cv, cp = attn_mod.cache_update(
+            cache_l["k"], cache_l["v"], cache_l["pos"], k, v, pos)
+        o = attn_mod.decode_attention(q, ck, cv, cp, window=cfg.attn_window)
+        branch = attn_mod.out_proj(o, lp["attn"])
+        new_cache.update(k=ck, v=cv, pos=cp)
+    if cfg.has_ssm:
+        m, conv, st = ssm_mod.mamba_decode_step(
+            h, lp["ssm"], cfg, cache_l["conv"], cache_l["ssm"])
+        branch = m if branch is None else (branch + m) * 0.5
+        new_cache.update(conv=conv, ssm=st)
+    x = x + branch
+    if cfg.moe is not None:
+        h2 = rms_norm(x, lp["ln2"], cfg.norm_eps)
+        y, _ = moe_mod.moe_ffn(h2, lp["moe"], cfg.moe, dropless=True)
+        x = x + y
+    elif cfg.has_mlp:
+        from repro.models.layers import swiglu
+        h2 = rms_norm(x, lp["ln2"], cfg.norm_eps)
+        x = x + swiglu(h2, lp["mlp"]["wg"], lp["mlp"]["wu"], lp["mlp"]["wd"])
+    return x, new_cache
+
+
+def decode_step(params, cache, token: jax.Array, pos, cfg: ArchConfig,
+                ctx: Optional[ShardCtx] = None):
+    """token [B,1] int32, pos scalar int32 -> (logits [B,Vp], new cache)."""
+    from repro.models import flags
+    ctx = ctx or ShardCtx()
+    if flags.serving_layout == "tp2d" and ctx.mesh is not None:
+        ctx = dataclasses.replace(ctx, force_dp_none=True)
+    dt = jnp.dtype(cfg.dtype)
+    x = jnp.take(params["embed"], token, axis=0).astype(dt)
+    x = ctx.constrain(x, ctx.dp, None, None)
+
+    def body(x, inp):
+        lp, cache_l = inp
+        x, new_cache_l = _layer_decode(x, lp, cache_l, pos, cfg, ctx)
+        return x, new_cache_l
+
+    from repro.models import flags
+    x, new_cache = jax.lax.scan(body, x, (params["layers"], cache),
+                                unroll=flags.scan_unroll())
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,vd->bsv", x, head.astype(dt))[:, 0]
+    return ctx.constrain(logits, ctx.dp, "model"), new_cache
+
+
+def prefill(params, tokens: jax.Array, cfg: ArchConfig,
+            ctx: Optional[ShardCtx] = None, scan_impl: str = "seq"):
+    """Prefill = forward; returns last-position logits (cache assembly for
+    mixed prefill->decode serving lives in serving/engine.py)."""
+    logits, _ = forward(params, tokens, cfg, ctx, scan_impl)
+    return logits[:, -1]

@@ -1,0 +1,86 @@
+"""Mesh axes + sharding rules for the production meshes.
+
+Mesh: ``(data, model)`` = (16, 16) single pod, ``(pod, data, model)`` =
+(2, 16, 16) multi-pod.  `model` carries TP/EP/SP; `data` carries DP +
+ZeRO-3 FSDP (parameters/optimizer sharded over `data` as well); `pod`
+extends data parallelism across the DCN (only gradient all-reduce
+crosses pods by default; `fsdp_over_pod` additionally ZeRO-shards across
+pods for the very largest configs).
+
+Attention sharding mode is chosen per architecture (DESIGN.md §5):
+  'head'  q-heads sharded over `model`; K/V (fewer GQA heads) kept whole
+          and broadcast-repeated to q-heads inside the kernel.
+  'seqq'  for head counts not divisible by TP (deepseek 56H, hymba 25H,
+          whisper 12H): the *query sequence* is sharded over `model`
+          (sequence parallelism) and K/V are gathered — FLOPs shard
+          evenly with no head-divisibility constraint.
+Decode always uses sequence-sharded KV caches over `model` (flash-decode
+style partial softmax; the per-step collectives are activation-sized).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+SINGLE_POD_AXES = ("data", "model")
+MULTI_POD_AXES = ("pod", "data", "model")
+
+
+def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    """Axes carrying pure data parallelism (batch dim)."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def tp_size(mesh: Mesh) -> int:
+    return mesh.shape["model"]
+
+
+def fsdp_axis(mesh: Mesh, fsdp_over_pod: bool = False):
+    if fsdp_over_pod and "pod" in mesh.axis_names:
+        return ("pod", "data")
+    return "data"
+
+
+def attn_mode(n_heads: int, tp: int) -> str:
+    return "head" if n_heads % tp == 0 else "seqq"
+
+
+def shard(x, mesh: Mesh, spec: P):
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def named(mesh: Mesh, spec: P) -> NamedSharding:
+    return NamedSharding(mesh, spec)
+
+
+def tree_shardings(mesh: Mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree,
+        is_leaf=lambda s: isinstance(s, P),
+    )
+
+
+# --------------------------------------------------------------------------- #
+# divisibility-safe helpers: never emit a spec that does not divide
+# --------------------------------------------------------------------------- #
+def _div_ok(dim: Optional[int], size: int) -> bool:
+    return dim is not None and dim % size == 0 and dim >= size
+
+
+def safe_spec(shape: Sequence[int], wanted: Sequence, mesh: Mesh) -> P:
+    """Drop sharding on any dim the mesh axis does not divide evenly."""
+    out = []
+    for dim, ax in zip(shape, wanted):
+        if ax is None:
+            out.append(None)
+            continue
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        size = 1
+        for a in axes:
+            size *= mesh.shape[a]
+        out.append(ax if _div_ok(dim, size) else None)
+    return P(*out)

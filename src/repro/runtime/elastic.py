@@ -1,0 +1,38 @@
+"""Elastic scaling: re-derive a production mesh from however many
+devices are currently healthy, preserving the TP degree (which is fixed
+by memory geometry) and absorbing node loss in the data-parallel axes.
+
+Combined with checkpoint.restore(mesh=..., spec_tree=...) a job restarts
+on N' != N chips with nothing more than a different --mesh flag: the
+global arrays re-shard on load (ZeRO/TP layouts are derived from specs,
+not from stored shard files).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh
+
+
+def derive_mesh_shape(n_devices: int, tp: int = 16,
+                      pods: Optional[int] = None) -> Tuple[Tuple[int, ...], Tuple[str, ...]]:
+    """Largest (pod, data, model) grid that fits n_devices with fixed TP."""
+    if n_devices % tp != 0:
+        raise ValueError(f"{n_devices} devices not divisible by tp={tp}")
+    rows = n_devices // tp
+    if pods and pods > 1:
+        if rows % pods != 0:
+            raise ValueError(f"data rows {rows} not divisible by pods={pods}")
+        return (pods, rows // pods, tp), ("pod", "data", "model")
+    return (rows, tp), ("data", "model")
+
+
+def make_elastic_mesh(tp: int = 16, pods: Optional[int] = None,
+                      devices: Optional[Sequence] = None) -> Mesh:
+    devs = list(devices) if devices is not None else jax.devices()
+    # absorb partial node loss: round down to a full multiple of tp
+    usable = (len(devs) // tp) * tp
+    shape, axes = derive_mesh_shape(usable, tp, pods)
+    return jax.make_mesh(shape, axes, devices=devs[:usable])

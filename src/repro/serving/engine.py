@@ -1,0 +1,87 @@
+"""Minimal batched serving engine (continuous-batching style, single
+host).  Demonstrates the serve path end-to-end on CPU with reduced
+configs; the decode step it drives is the same function the multi-pod
+dry-run lowers at production shapes.
+
+Flow: requests arrive with token prompts -> prefill computes logits for
+the last prompt position and fills the KV/SSM cache via teacher-forced
+decode steps (simple, allocation-free for reduced configs) -> greedy
+decode until max_new_tokens.  Batch slots are fixed; finished slots are
+refilled from the queue (continuous batching).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models.registry import ModelAPI, build_model
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray            # int32 [n]
+    max_new_tokens: int = 16
+    output: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServingEngine:
+    def __init__(self, cfg: ArchConfig, params, batch_size: int = 4,
+                 max_seq: int = 128):
+        self.cfg = cfg
+        self.model = build_model(cfg)
+        self.params = params
+        self.B = batch_size
+        self.max_seq = max_seq
+        self._decode = jax.jit(
+            lambda p, c, t, pos: self.model.decode_step(p, c, t, pos))
+
+    def run(self, requests: List[Request]) -> Dict[int, List[int]]:
+        queue = list(requests)
+        slots: List[Optional[Request]] = [None] * self.B
+        cache = self.model.init_cache(self.B, self.max_seq)
+        cur_tok = np.zeros((self.B, 1), np.int32)
+        remaining_prompt: List[np.ndarray] = [np.zeros(0, np.int32)] * self.B
+        pos = 0
+        results: Dict[int, List[int]] = {}
+
+        def refill():
+            for i in range(self.B):
+                if slots[i] is None and queue:
+                    r = queue.pop(0)
+                    slots[i] = r
+                    remaining_prompt[i] = r.prompt.copy()
+                    cur_tok[i, 0] = r.prompt[0]
+                    remaining_prompt[i] = r.prompt[1:]
+
+        refill()
+        while any(s is not None for s in slots) and pos < self.max_seq - 1:
+            logits, cache = self._decode(
+                self.params, cache, jnp.asarray(cur_tok), jnp.int32(pos))
+            nxt = np.asarray(jnp.argmax(logits, axis=-1))
+            pos += 1
+            for i, r in enumerate(slots):
+                if r is None:
+                    continue
+                if remaining_prompt[i].size > 0:  # teacher-forced prefill
+                    cur_tok[i, 0] = remaining_prompt[i][0]
+                    remaining_prompt[i] = remaining_prompt[i][1:]
+                else:
+                    tok = int(nxt[i])
+                    r.output.append(tok)
+                    cur_tok[i, 0] = tok
+                    if len(r.output) >= r.max_new_tokens:
+                        results[r.rid] = r.output
+                        slots[i] = None
+            refill()
+        for r in slots:
+            if r is not None:
+                results[r.rid] = r.output
+        return results

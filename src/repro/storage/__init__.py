@@ -1,0 +1,4 @@
+from repro.storage.devices import DEVICES, DeviceModel, get_device
+from repro.storage.io import FileStore, IOStats
+
+__all__ = ["DEVICES", "DeviceModel", "get_device", "FileStore", "IOStats"]

@@ -1,0 +1,112 @@
+"""File store with exact I/O accounting.
+
+SCT payloads are held in memory (this is a single-box reproduction; the
+paper's files are 32-64 MB and the workloads fit RAM), but every logical
+read/write records the *serialized on-disk size* and an I/O request count
+so `devices.DeviceModel` can convert counters to modeled seconds per
+device class.  An optional `spill_dir` persists real bytes for durability
+tests (checkpoint/restart of the store).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import pickle
+from typing import Any, Dict, Optional
+
+
+@dataclasses.dataclass
+class IOStats:
+    bytes_read: int = 0
+    bytes_written: int = 0
+    read_ios: int = 0
+    write_ios: int = 0
+
+    def add_read(self, nbytes: int, n_ios: int = 1) -> None:
+        self.bytes_read += int(nbytes)
+        self.read_ios += int(n_ios)
+
+    def add_write(self, nbytes: int, n_ios: int = 1) -> None:
+        self.bytes_written += int(nbytes)
+        self.write_ios += int(n_ios)
+
+    def merged(self, other: "IOStats") -> "IOStats":
+        return IOStats(
+            self.bytes_read + other.bytes_read,
+            self.bytes_written + other.bytes_written,
+            self.read_ios + other.read_ios,
+            self.write_ios + other.write_ios,
+        )
+
+    def snapshot(self) -> "IOStats":
+        return dataclasses.replace(self)
+
+    def delta(self, since: "IOStats") -> "IOStats":
+        return IOStats(
+            self.bytes_read - since.bytes_read,
+            self.bytes_written - since.bytes_written,
+            self.read_ios - since.read_ios,
+            self.write_ios - since.write_ios,
+        )
+
+
+class FileStore:
+    """In-memory object store with byte-accurate accounting."""
+
+    def __init__(self, spill_dir: Optional[str] = None):
+        self._objects: Dict[int, Any] = {}
+        self._sizes: Dict[int, int] = {}
+        self._next_id = 0
+        self.stats = IOStats()
+        self.spill_dir = spill_dir
+        if spill_dir:
+            os.makedirs(spill_dir, exist_ok=True)
+
+    def alloc_id(self) -> int:
+        fid = self._next_id
+        self._next_id += 1
+        return fid
+
+    def write(self, obj: Any, nbytes: int, fid: Optional[int] = None) -> int:
+        if fid is None:
+            fid = self.alloc_id()
+        self._objects[fid] = obj
+        self._sizes[fid] = int(nbytes)
+        self.stats.add_write(nbytes)
+        if self.spill_dir:
+            path = os.path.join(self.spill_dir, f"f{fid:08d}.bin")
+            with open(path + ".tmp", "wb") as f:
+                pickle.dump(obj, f)
+            os.replace(path + ".tmp", path)
+        return fid
+
+    def read(self, fid: int, nbytes: Optional[int] = None) -> Any:
+        """Full-file read (the paper's bulk-read path for long scans)."""
+        n = self._sizes[fid] if nbytes is None else int(nbytes)
+        self.stats.add_read(n)
+        return self._objects[fid]
+
+    def read_partial(self, fid: int, nbytes: int, n_ios: int = 1) -> Any:
+        """Block-granular read (point lookup path): charge only the blocks."""
+        self.stats.add_read(nbytes, n_ios)
+        return self._objects[fid]
+
+    def delete(self, fid: int) -> None:
+        self._objects.pop(fid, None)
+        self._sizes.pop(fid, None)
+        if self.spill_dir:
+            path = os.path.join(self.spill_dir, f"f{fid:08d}.bin")
+            if os.path.exists(path):
+                os.remove(path)
+
+    def size_of(self, fid: int) -> int:
+        return self._sizes[fid]
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self._sizes.values())
+
+    @property
+    def n_files(self) -> int:
+        return len(self._objects)

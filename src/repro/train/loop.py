@@ -1,0 +1,109 @@
+"""Fault-tolerant training loop: periodic async checkpoints, straggler
+monitoring, crash -> restore-and-continue supervision.
+
+The loop is deliberately dumb about *what* it runs (any jit'd step over
+{params, opt, step}) and careful about *how*: every step is timed for
+the straggler monitor, failures (real or injected) trigger a restore of
+the newest complete checkpoint and a replay of the data stream from the
+restored step (the data iterator must be re-seekable by step, which the
+TokenStore batches are via their deterministic ordering).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Iterable, List, Optional
+
+import jax
+
+from repro.checkpoint import ckpt
+from repro.runtime.fault import FailureInjector, InjectedFailure, StepMonitor
+
+
+@dataclasses.dataclass
+class LoopConfig:
+    total_steps: int
+    ckpt_dir: str
+    ckpt_every: int = 50
+    keep_last: int = 3
+    async_ckpt: bool = True
+    max_restarts: int = 5
+
+
+@dataclasses.dataclass
+class LoopResult:
+    state: Any
+    metrics_history: List[Dict[str, float]]
+    restarts: int
+    monitor: StepMonitor
+
+
+def run(
+    train_step: Callable,
+    init_state: Any,
+    batch_fn: Callable[[int], Dict[str, Any]],
+    cfg: LoopConfig,
+    injector: Optional[FailureInjector] = None,
+    log_every: int = 10,
+    logger: Callable[[str], None] = print,
+) -> LoopResult:
+    monitor = StepMonitor()
+    history: List[Dict[str, float]] = []
+    restarts = 0
+    ckpt_writer = ckpt.AsyncCheckpointer(cfg.ckpt_dir, cfg.keep_last) \
+        if cfg.async_ckpt else None
+
+    state = init_state
+    # resume if a checkpoint exists (cold restart path)
+    last = ckpt.latest_step(cfg.ckpt_dir)
+    if last is not None:
+        _, state = ckpt.restore(cfg.ckpt_dir, init_state)
+        logger(f"[loop] resumed from step {last}")
+
+    step = int(jax.device_get(state["step"]))
+    while step < cfg.total_steps:
+        try:
+            batch = batch_fn(step)
+            t0 = time.perf_counter()
+            if injector is not None:
+                injector.check(step + 1)
+            state, metrics = train_step(state, batch)
+            jax.block_until_ready(metrics["loss_total"])
+            dt = time.perf_counter() - t0
+            step += 1
+            flagged = monitor.record(step, dt)
+            m = {k: float(jax.device_get(v)) for k, v in metrics.items()}
+            m["step_seconds"] = dt
+            history.append(m)
+            if flagged:
+                logger(f"[loop] straggler step {step}: {dt:.3f}s "
+                       f"(ewma {monitor.ewma:.3f}s)")
+            if step % log_every == 0:
+                logger(f"[loop] step {step} loss={m.get('loss', m['loss_total']):.4f} "
+                       f"({dt * 1e3:.0f} ms)")
+            if step % cfg.ckpt_every == 0 or step == cfg.total_steps:
+                if ckpt_writer is not None:
+                    ckpt_writer.submit(step, state)
+                else:
+                    ckpt.save(cfg.ckpt_dir, step, state, keep_last=cfg.keep_last)
+        except InjectedFailure as e:
+            restarts += 1
+            logger(f"[loop] {e}; restarts={restarts}")
+            if restarts > cfg.max_restarts:
+                raise
+            if ckpt_writer is not None:
+                ckpt_writer.wait()
+            last = ckpt.latest_step(cfg.ckpt_dir)
+            if last is None:
+                logger("[loop] no checkpoint yet; restarting from init")
+                state = init_state
+                step = 0
+            else:
+                _, state = ckpt.restore(cfg.ckpt_dir, init_state)
+                step = int(jax.device_get(state["step"]))
+                logger(f"[loop] restored step {step}")
+    if ckpt_writer is not None:
+        ckpt_writer.wait()
+        ckpt_writer.close()
+    return LoopResult(state, history, restarts, monitor)

@@ -1,0 +1,60 @@
+"""Paper cost-model (§4.2, Table 1) tests: inequality I1 border, the
+paper's worked example, and qualitative orderings the analysis claims."""
+
+import math
+
+from repro.core.costmodel import (CostParams, border_ndv, compaction_cpu,
+                                  compaction_io, filter_cpu, filter_io,
+                                  inequality_I1_border, inequality_I1_holds)
+
+
+def test_paper_worked_example_border():
+    """Paper: 'consider a 32MB file that roughly accommodates up to
+    1,600,000 OPD-encoded key-value pairs sized in 20 bytes, D_i must
+    pass about 90,000 to exceed the border of inequation I1'."""
+    p = CostParams(F=32 * 2**20, S_K=16, S_V=64, S_O=4)
+    b = border_ndv(p)
+    assert 6e4 < b < 2.2e5, b  # ~90k within modeling slack
+    assert inequality_I1_holds(CostParams(D_i=50_000))
+    assert not inequality_I1_holds(CostParams(D_i=10**6))
+
+
+def test_border_stable_across_value_sizes():
+    """Paper: 'the border remains relatively stable regardless of the
+    value size and file size' (as an NDV ratio)."""
+    ratios = []
+    for sv in (32, 64, 128, 256):
+        p = CostParams(S_V=sv)
+        cap = p.F / (p.S_K + p.S_O)
+        ratios.append(border_ndv(p) / cap)
+    assert max(ratios) / min(ratios) < 4.0
+
+
+def test_compaction_cpu_ordering():
+    """Heavy compression must dominate CPU cost; OPD beats plain at low
+    NDV and loses at very high NDV (paper Figure 4)."""
+    low = CostParams(D_i=10_000)
+    cpu = compaction_cpu(low)
+    assert cpu["heavy"] > cpu["plain"] > cpu["opd"]
+    high = CostParams(D_i=2_000_000)
+    cpu_h = compaction_cpu(high)
+    assert cpu_h["opd"] > cpu_h["plain"]
+
+
+def test_compaction_io_ordering():
+    io = compaction_io(CostParams())
+    assert io["opd"] < io["plain"]
+    assert io["heavy"] < io["plain"]
+
+
+def test_filter_cpu_simd_win():
+    """OPD filter CPU must be far below plain (the parallelism /
+    compression-ratio factor)."""
+    cpu = filter_cpu(CostParams())
+    assert cpu["opd"] < cpu["plain"] / 5
+    assert cpu["heavy"] > cpu["plain"]
+
+
+def test_filter_io_ordering():
+    io = filter_io(CostParams())
+    assert io["opd"] < io["plain"]

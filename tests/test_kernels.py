@@ -1,0 +1,132 @@
+"""Pallas kernel validation: shape/dtype sweeps vs the pure-jnp oracles
+in kernels/ref.py (interpret mode on CPU)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.sct import bitpack as np_bitpack, bitunpack as np_bitunpack
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(42)
+
+
+@pytest.mark.parametrize("n", [1, 100, 4096, 33000, 262144])
+def test_range_filter_codes_shapes(n):
+    codes = RNG.integers(-1, 5000, n).astype(np.int32)
+    lo, hi = 100, 999
+    got = ops.range_filter_codes(codes, lo, hi)
+    exp = np.asarray(ref.range_filter_codes(jnp.asarray(codes), lo, hi))
+    assert np.array_equal(got, exp)
+
+
+@pytest.mark.parametrize("n", [100, 8192])
+def test_range_filter_count(n):
+    codes = RNG.integers(0, 1000, n).astype(np.int32)
+    got = ops.range_filter_count(codes, 10, 200)
+    assert got == int(((codes >= 10) & (codes <= 200)).sum())
+
+
+@pytest.mark.parametrize("width", [1, 2, 4, 8, 16, 32])
+@pytest.mark.parametrize("n", [7, 128, 5000])
+def test_bitpack_roundtrip_vs_numpy(width, n):
+    codes = RNG.integers(0, 2 ** min(width, 31), n).astype(np.int32)
+    w_np = np_bitpack(codes, width)
+    assert np.array_equal(ops.pack_codes(codes, width), w_np)
+    assert np.array_equal(ops.unpack_codes(w_np, width, n), codes)
+    assert np.array_equal(np_bitunpack(w_np, width, n), codes)
+
+
+@pytest.mark.parametrize("width", [2, 4, 8, 16])
+def test_packed_filter_vs_oracle(width):
+    n = 40000
+    codes = RNG.integers(0, 2 ** min(width, 16), n).astype(np.int32)
+    words = np_bitpack(codes, width)
+    lo, hi = 1, max(1, 2 ** width // 2)
+    bitmap = ops.range_filter_packed(words, width, lo, hi)
+    exp_bm = np.asarray(ref.range_filter_packed(jnp.asarray(words), width, lo, hi))
+    assert np.array_equal(bitmap, exp_bm)
+    mask = ops.bitmap_to_mask(bitmap, width, n)
+    assert np.array_equal(mask, (codes >= lo) & (codes <= hi))
+
+
+@given(st.integers(1, 5), st.integers(0, 2**32 - 1))
+@settings(max_examples=20, deadline=None)
+def test_bloom_probe_property(scale, seed):
+    rng = np.random.default_rng(seed)
+    nbits = 1 << (10 + scale)
+    bloom = rng.integers(0, 2**32, nbits // 32, dtype=np.uint64).astype(np.uint32)
+    keys = rng.integers(0, 2**32, 257, dtype=np.uint64).astype(np.uint32)
+    got = ops.bloom_probe(bloom, nbits, keys)
+    exp = np.asarray(ref.bloom_probe(jnp.asarray(bloom), nbits, jnp.asarray(keys)))
+    assert np.array_equal(got, exp)
+
+
+def test_bloom_no_false_negatives():
+    """Keys inserted via the engine's BlockIndex-compatible reference must
+    always probe positive (bloom contract)."""
+    nbits = 1 << 13
+    keys = RNG.integers(0, 2**32, 200, dtype=np.uint64).astype(np.uint32)
+    words = np.zeros(nbits // 32, np.uint32)
+    for s in range(6):
+        h = np.asarray(ref.mix32(jnp.asarray(keys), ref.BLOOM_SEEDS32[s])) % nbits
+        np.bitwise_or.at(words, h >> 5, np.uint32(1) << (h & 31).astype(np.uint32))
+    assert ops.bloom_probe(words, nbits, keys).all()
+
+
+@pytest.mark.parametrize("shape", [(1, 32, 128, 8), (2, 64, 256, 16),
+                                   (3, 96, 384, 16)])
+@pytest.mark.parametrize("chunk", [16, 32])
+def test_ssm_scan_vs_oracle(shape, chunk):
+    B, L, D, N = shape
+    if L % chunk:
+        pytest.skip("chunk must divide L")
+    u = RNG.normal(size=(B, L, D)).astype(np.float32)
+    dt = np.abs(RNG.normal(size=(B, L, D))).astype(np.float32) * 0.1
+    A = -np.abs(RNG.normal(size=(D, N))).astype(np.float32)
+    Bm = RNG.normal(size=(B, L, N)).astype(np.float32)
+    Cm = RNG.normal(size=(B, L, N)).astype(np.float32)
+    y, st_f = ops.ssm_scan(u, dt, A, Bm, Cm, chunk=chunk)
+    y_ref, st_ref = ref.ssm_scan_batched(
+        jnp.asarray(u), jnp.asarray(dt), jnp.asarray(A),
+        jnp.asarray(Bm), jnp.asarray(Cm))
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=3e-5, atol=3e-5)
+    np.testing.assert_allclose(np.asarray(st_f), np.asarray(st_ref),
+                               rtol=3e-5, atol=3e-5)
+
+
+def test_ssm_chunked_jnp_matches_seq():
+    """Training-path chunked scan == sequential scan (model-level)."""
+    from repro.models.ssm import selective_scan_chunked, selective_scan_seq
+    B, L, D, N = 2, 100, 64, 8
+    u = jnp.asarray(RNG.normal(size=(B, L, D)), jnp.float32)
+    dt = jnp.abs(jnp.asarray(RNG.normal(size=(B, L, D)), jnp.float32)) * 0.1
+    A = -jnp.abs(jnp.asarray(RNG.normal(size=(D, N)), jnp.float32))
+    Bm = jnp.asarray(RNG.normal(size=(B, L, N)), jnp.float32)
+    Cm = jnp.asarray(RNG.normal(size=(B, L, N)), jnp.float32)
+    y1 = selective_scan_seq(u, dt, A, Bm, Cm)
+    y2 = selective_scan_chunked(u, dt, A, Bm, Cm, chunk=32)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_engine_jax_filter_backends_match_numpy():
+    """The LSM engine produces identical filter results with the numpy,
+    jax (opd_filter) and jax_packed (packed_filter) backends."""
+    import dataclasses
+    from repro.core import LSMConfig, LSMTree, Predicate
+    base = LSMConfig(codec="opd", value_width=24, file_bytes=32 * 1024,
+                     l0_limit=2, size_ratio=3)
+    results = {}
+    for backend in ("numpy", "jax", "jax_packed"):
+        t = LSMTree(dataclasses.replace(base, filter_backend=backend))
+        rng = np.random.default_rng(5)
+        for _ in range(5000):
+            t.put(int(rng.integers(0, 3000)),
+                  b"tag_%02d_pad" % int(rng.integers(0, 40)))
+        res = t.filter(Predicate("prefix", b"tag_0"))
+        results[backend] = sorted(res.keys.tolist())
+    assert results["numpy"] == results["jax"] == results["jax_packed"]
+    assert len(results["numpy"]) > 0

@@ -1,0 +1,136 @@
+"""Per-architecture smoke tests (assignment requirement): a REDUCED
+config of each family runs one forward/train step on CPU asserting
+output shapes + no NaNs; plus decode-vs-forward consistency."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import SHAPES, all_archs, applicability
+from repro.models.registry import build_model
+from repro.train.optimizer import AdamWConfig
+from repro.train.train_step import make_train_state, make_train_step
+
+ARCHS = sorted(all_archs())
+
+
+def make_batch(cfg, B=2, S=32, rng=None):
+    rng = rng or np.random.default_rng(0)
+    if cfg.enc_dec:
+        from repro.models.encdec import dec_len_for
+        Sd = dec_len_for(S)
+        return {
+            "frames": jnp.asarray(rng.normal(size=(B, S, cfg.d_model)),
+                                  jnp.float32),
+            "tokens": jnp.asarray(rng.integers(0, cfg.vocab, (B, Sd)), jnp.int32),
+            "labels": jnp.asarray(rng.integers(0, cfg.vocab, (B, Sd)), jnp.int32),
+            "mask": jnp.ones((B, Sd), jnp.float32),
+        }
+    return {
+        "tokens": jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32),
+        "labels": jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32),
+        "mask": jnp.ones((B, S), jnp.float32),
+    }
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_and_train_step(arch):
+    cfg = all_archs()[arch].reduced()
+    model = build_model(cfg)
+    state = make_train_state(model, AdamWConfig(warmup_steps=0),
+                             jax.random.PRNGKey(0))
+    batch = make_batch(cfg)
+    step = jax.jit(make_train_step(model, AdamWConfig(warmup_steps=0),
+                                   num_microbatches=2))
+    state2, metrics = step(state, batch)
+    assert np.isfinite(float(metrics["loss_total"]))
+    assert np.isfinite(float(metrics["grad_norm"]))
+    # params changed
+    p0 = jax.tree.leaves(state["params"])[0]
+    p1 = jax.tree.leaves(state2["params"])[0]
+    assert not np.allclose(np.asarray(p0), np.asarray(p1))
+    # logits shape via loss internals
+    loss, aux = model.loss(state["params"], batch)
+    assert np.isfinite(float(loss))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_decode_matches_forward(arch):
+    """Greedy decode over a teacher-forced prefix must produce the same
+    next-token logits as the full forward pass at each position."""
+    cfg = all_archs()[arch].reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(1))
+    rng = np.random.default_rng(2)
+    B, S = 2, 12
+    if cfg.enc_dec:
+        from repro.models import encdec
+        frames = jnp.asarray(rng.normal(size=(B, 16, cfg.d_model)), jnp.float32)
+        tokens = jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32)
+        ctx = None
+        enc_out = encdec.encode(params, frames, cfg,
+                                __import__("repro.models.transformer",
+                                           fromlist=["ShardCtx"]).ShardCtx())
+        full = encdec.decode_train(params, tokens, enc_out, cfg,
+                                   __import__("repro.models.transformer",
+                                              fromlist=["ShardCtx"]).ShardCtx())
+        cache = model.init_cache(B, 16, )
+        # fill cross-attn K/V
+        _, xk, xv = encdec.prefill(params, frames, cfg)
+        cache["xk"], cache["xv"] = xk, xv
+        logits_steps = []
+        for t in range(S):
+            lg, cache = model.decode_step(params, cache, tokens[:, t:t + 1],
+                                          jnp.int32(t))
+            logits_steps.append(np.asarray(lg))
+        full_np = np.asarray(full, np.float32)
+        for t in range(S):
+            np.testing.assert_allclose(logits_steps[t], full_np[:, t],
+                                       rtol=2e-4, atol=2e-4)
+        return
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32)
+    from repro.models.transformer import forward
+    full, _ = forward(params, tokens, cfg)
+    full_np = np.asarray(full, np.float32)
+    cache = model.init_cache(B, S)
+    for t in range(S):
+        lg, cache = model.decode_step(params, cache, tokens[:, t:t + 1],
+                                      jnp.int32(t))
+        np.testing.assert_allclose(np.asarray(lg), full_np[:, t],
+                                   rtol=2e-4, atol=2e-4)
+
+
+def test_applicability_matrix():
+    """long_500k runs only for ssm/hybrid; everything else runs all."""
+    runs = {}
+    for name, cfg in all_archs().items():
+        for sname, shape in SHAPES.items():
+            ok, reason = applicability(cfg, shape)
+            runs[(name, sname)] = ok
+            if sname != "long_500k":
+                assert ok
+    assert runs[("falcon-mamba-7b", "long_500k")]
+    assert runs[("hymba-1.5b", "long_500k")]
+    assert not runs[("llama3-405b", "long_500k")]
+    assert not runs[("whisper-small", "long_500k")]
+    assert sum(runs.values()) == 32  # 40 cells - 8 documented skips
+
+
+def test_param_counts_match_public_sizes():
+    """Sanity: computed parameter totals are near the advertised sizes."""
+    import math
+    expect = {
+        "llama3-8b": 8.0e9, "llama3-405b": 405e9, "glm4-9b": 9.4e9,
+        "deepseek-coder-33b": 33e9, "chameleon-34b": 34e9,
+        "falcon-mamba-7b": 7.3e9, "hymba-1.5b": 1.5e9,
+        "phi3.5-moe-42b-a6.6b": 42e9, "granite-moe-1b-a400m": 1.3e9,
+        "whisper-small": 0.24e9,
+    }
+    for name, target in expect.items():
+        n_total, n_active = all_archs()[name].param_count()
+        assert 0.6 < n_total / target < 1.45, (name, n_total, target)
+    # MoE active < total
+    for name in ("phi3.5-moe-42b-a6.6b", "granite-moe-1b-a400m"):
+        n_total, n_active = all_archs()[name].param_count()
+        assert n_active < 0.5 * n_total

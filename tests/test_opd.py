@@ -1,0 +1,108 @@
+"""OPD unit + property tests: bijectivity, order preservation, predicate
+transform, Algorithm-1 dictionary merge."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.opd import OPD, Predicate, as_fixed_bytes
+
+W = 24
+
+
+def mk(values):
+    return as_fixed_bytes([v[:W] for v in values], W)
+
+
+# fixed-width values are NUL-padded, so NUL bytes inside values/predicates
+# are outside the supported domain (documented in core/opd.py)
+bytestr = st.binary(min_size=1, max_size=W).filter(lambda b: b"\x00" not in b)
+
+
+@given(st.lists(bytestr, min_size=1, max_size=200))
+@settings(max_examples=60, deadline=None)
+def test_build_bijective_and_order_preserving(vals):
+    raw = mk(vals)
+    opd, codes = OPD.build(raw)
+    # decode(encode(x)) == x
+    assert np.array_equal(opd.decode(codes), raw)
+    # order preserving: v_i < v_j <=> E(v_i) < E(v_j)
+    enc = opd.encode(raw)
+    order_v = np.argsort(raw, kind="stable")
+    assert np.array_equal(np.sort(raw), raw[order_v])
+    vi = raw[order_v]
+    ci = enc[order_v]
+    for k in range(len(vi) - 1):
+        if vi[k] < vi[k + 1]:
+            assert ci[k] < ci[k + 1]
+        else:
+            assert ci[k] == ci[k + 1]
+    # dense domain [0, D)
+    assert opd.size == len(np.unique(raw))
+    assert enc.min() == 0 and enc.max() == opd.size - 1
+
+
+@given(st.lists(bytestr, min_size=1, max_size=120),
+       st.binary(min_size=1, max_size=4).filter(lambda b: b"\x00" not in b))
+@settings(max_examples=60, deadline=None)
+def test_prefix_predicate_code_range(vals, prefix):
+    raw = mk(vals)
+    opd, codes = OPD.build(raw)
+    lo, hi = opd.code_range(Predicate("prefix", prefix))
+    mask_codes = (codes >= lo) & (codes < hi)
+    mask_oracle = np.array([bytes(v).startswith(prefix) for v in raw])
+    assert np.array_equal(mask_codes, mask_oracle)
+
+
+@given(st.lists(bytestr, min_size=1, max_size=120), bytestr, bytestr)
+@settings(max_examples=60, deadline=None)
+def test_range_predicate_code_range(vals, a, b):
+    if a > b:
+        a, b = b, a
+    raw = mk(vals)
+    opd, codes = OPD.build(raw)
+    lo, hi = opd.code_range(Predicate("range", a, b))
+    mask_codes = (codes >= lo) & (codes < hi)
+    mask_oracle = np.array([a <= bytes(v).rstrip(b"\x00") <= b for v in raw])
+    assert np.array_equal(mask_codes, mask_oracle)
+
+
+@given(st.lists(st.lists(bytestr, min_size=1, max_size=60),
+                min_size=1, max_size=5))
+@settings(max_examples=40, deadline=None)
+def test_merge_remaps_preserve_values_and_order(dict_sets):
+    opds = [OPD.build(mk(vs))[0] for vs in dict_sets]
+    merged, remaps = OPD.merge(opds)
+    # every old code maps to the same value under the new dictionary
+    for o, r in zip(opds, remaps):
+        assert np.array_equal(merged.values[r], o.values)
+        # order preserved within each source dict
+        assert np.all(np.diff(r) > 0) or o.size <= 1
+    # merged is dense, sorted, unique
+    assert np.array_equal(merged.values, np.unique(np.concatenate(
+        [o.values for o in opds])))
+
+
+def test_merge_subset_dense():
+    o1, _ = OPD.build(mk([b"a", b"b", b"c", b"d"]))
+    o2, _ = OPD.build(mk([b"b", b"x"]))
+    used1 = np.array([True, False, True, False])
+    used2 = np.array([True, True])
+    new, remaps = OPD.merge_subset([o1, o2], [used1, used2])
+    assert new.values.tolist() == [b"a", b"b", b"c", b"x"]
+    assert remaps[0].tolist() == [0, -1, 2, -1]
+    assert remaps[1].tolist() == [1, 3]
+
+
+def test_code_bits_and_packwidth():
+    from repro.core.sct import pack_width
+    opd, _ = OPD.build(mk([bytes([65 + i]) for i in range(26)]))
+    assert opd.size == 26
+    assert opd.code_bits == 5
+    assert pack_width(opd.code_bits) == 8
+
+
+def test_encode_raises_on_unknown():
+    opd, _ = OPD.build(mk([b"aa", b"bb"]))
+    with pytest.raises(KeyError):
+        opd.encode(mk([b"zz"]))

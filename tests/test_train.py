@@ -1,0 +1,138 @@
+"""Training-substrate tests: optimization progress, microbatch-accum
+equivalence, checkpoint roundtrip + elastic restore, fault-tolerant loop
+with injected failures, straggler detection."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import ckpt
+from repro.configs.base import get_config
+from repro.models.registry import build_model
+from repro.runtime.fault import FailureInjector, StepMonitor
+from repro.train.loop import LoopConfig, run
+from repro.train.optimizer import AdamWConfig, init_opt_state
+from repro.train.train_step import make_train_state, make_train_step
+
+CFG = get_config("llama3-8b").reduced()
+
+
+def batch_of(seed, B=4, S=32):
+    rng = np.random.default_rng(seed)
+    toks = rng.integers(0, CFG.vocab, (B, S + 1))
+    return {
+        "tokens": jnp.asarray(toks[:, :-1], jnp.int32),
+        "labels": jnp.asarray(toks[:, 1:], jnp.int32),
+        "mask": jnp.ones((B, S), jnp.float32),
+    }
+
+
+def test_loss_decreases_over_steps():
+    model = build_model(CFG)
+    ocfg = AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=50)
+    state = make_train_state(model, ocfg, jax.random.PRNGKey(0))
+    step = jax.jit(make_train_step(model, ocfg))
+    batch = batch_of(0)
+    losses = []
+    for _ in range(12):
+        state, m = step(state, batch)
+        losses.append(float(m["loss_total"]))
+    assert losses[-1] < losses[0] - 0.3, losses
+
+
+def test_microbatch_accumulation_equivalent():
+    """n_mb=1 and n_mb=4 must produce (nearly) identical updates."""
+    model = build_model(CFG)
+    ocfg = AdamWConfig(lr=1e-3, warmup_steps=0)
+    state0 = make_train_state(model, ocfg, jax.random.PRNGKey(0))
+    batch = batch_of(1, B=8)
+    s1, m1 = jax.jit(make_train_step(model, ocfg, num_microbatches=1))(state0, batch)
+    s4, m4 = jax.jit(make_train_step(model, ocfg, num_microbatches=4))(state0, batch)
+    np.testing.assert_allclose(float(m1["loss_total"]), float(m4["loss_total"]),
+                               rtol=1e-5)
+    for a, b in zip(jax.tree.leaves(s1["params"]), jax.tree.leaves(s4["params"])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-4, atol=2e-5)
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    model = build_model(CFG)
+    ocfg = AdamWConfig()
+    state = make_train_state(model, ocfg, jax.random.PRNGKey(3))
+    d = str(tmp_path / "ck")
+    ckpt.save(d, 7, state, meta={"arch": CFG.name})
+    step, restored = ckpt.restore(d, state)
+    assert step == 7
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_keep_last(tmp_path):
+    d = str(tmp_path / "ck")
+    tree = {"x": jnp.arange(4)}
+    for s in (1, 2, 3, 4, 5):
+        ckpt.save(d, s, tree, keep_last=2)
+    assert ckpt.all_steps(d) == [4, 5]
+
+
+def test_checkpoint_elastic_reshard(tmp_path):
+    """Save unsharded, restore onto a 2x1 mesh with NamedShardings."""
+    from jax.sharding import PartitionSpec as P
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    tree = {"w": jnp.arange(16, dtype=jnp.float32).reshape(4, 4)}
+    d = str(tmp_path / "ck")
+    ckpt.save(d, 1, tree)
+    specs = {"w": P(None, None)}
+    step, restored = ckpt.restore(d, tree, mesh=mesh, spec_tree=specs)
+    assert np.array_equal(np.asarray(restored["w"]), np.asarray(tree["w"]))
+
+
+def test_fault_tolerant_loop_restores(tmp_path):
+    model = build_model(CFG)
+    ocfg = AdamWConfig(lr=1e-3, warmup_steps=0)
+    state = make_train_state(model, ocfg, jax.random.PRNGKey(0))
+    step = jax.jit(make_train_step(model, ocfg))
+    inj = FailureInjector(fail_at_steps=(7, 13))
+    res = run(
+        step, state, lambda s: batch_of(s % 3),
+        LoopConfig(total_steps=16, ckpt_dir=str(tmp_path / "ck"),
+                   ckpt_every=5, async_ckpt=True),
+        injector=inj, log_every=100, logger=lambda s: None,
+    )
+    assert res.restarts == 2
+    assert int(jax.device_get(res.state["step"])) == 16
+    # deterministic replay: a failure-free run over the same stream ends
+    # at the same loss
+    res2 = run(
+        jax.jit(make_train_step(model, ocfg)),
+        make_train_state(model, ocfg, jax.random.PRNGKey(0)),
+        lambda s: batch_of(s % 3),
+        LoopConfig(total_steps=16, ckpt_dir=str(tmp_path / "ck2"),
+                   ckpt_every=100, async_ckpt=False),
+        log_every=100, logger=lambda s: None,
+    )
+    np.testing.assert_allclose(res.metrics_history[-1]["loss_total"],
+                               res2.metrics_history[-1]["loss_total"],
+                               rtol=1e-4)
+
+
+def test_straggler_detection():
+    mon = StepMonitor(alpha=0.5, straggler_factor=2.0, warmup=2)
+    for i in range(10):
+        flagged = mon.record(i, 0.1)
+        assert not flagged
+    assert mon.record(11, 0.5)  # 5x the EWMA
+    assert mon.stragglers == [11]
+    assert abs(mon.ewma - 0.1) < 1e-6  # straggler did not poison the EWMA
+
+
+def test_grad_compression_hook_runs():
+    model = build_model(CFG)
+    ocfg = AdamWConfig(lr=1e-3, warmup_steps=0)
+    state = make_train_state(model, ocfg, jax.random.PRNGKey(0))
+    step = jax.jit(make_train_step(model, ocfg, grad_compression="bf16"))
+    state2, m = step(state, batch_of(0))
+    assert np.isfinite(float(m["loss_total"]))
