@@ -3,10 +3,16 @@
 Runs the paper's prefix filter over all systems, plus the OPD engine
 with its three evaluation backends (numpy / Pallas opd_filter / Pallas
 packed_filter in interpret mode) so the direct-on-compressed pipeline is
-exercised end to end."""
+exercised end to end.
+
+``run_batched`` (and the ``--batch K`` CLI) measures the multi-predicate
+executor: K concurrent predicates drained through ``ScanServer`` /
+``filter_many`` in one column pass vs K sequential single-predicate
+scans — the per-predicate amortization of the batched path."""
 
 from __future__ import annotations
 
+import sys
 import time
 from typing import List
 
@@ -18,6 +24,7 @@ from repro.core import Predicate
 
 VALUE_SIZES = [32, 128, 512]
 N_FILTERS = 5
+BATCH_KS = [1, 4, 16, 64]
 
 
 def _selectivity_pred(sel: float, ndv: int) -> Predicate:
@@ -101,6 +108,76 @@ def run_backends(n: int = 60_000, width: int = 128) -> List[BenchRow]:
     return rows
 
 
+def _batch_preds(k: int, ncat: int = 1000) -> List[Predicate]:
+    """k distinct single-category prefix predicates (disjoint ranges)."""
+    return [Predicate("prefix", b"cat_%05d_" % (i % ncat)) for i in range(k)]
+
+
+def run_batched(n: int = 60_000, width: int = 128, ks=None,
+                backend: str = "jax_packed", repeats: int = 3) -> List[BenchRow]:
+    """K-predicate batch via filter_many vs K sequential single filters.
+
+    Reports per-predicate latency for both paths and the amortization
+    factor; sweeps K so the trajectory (flat sequential cost, falling
+    batched cost) is visible in one run."""
+    import dataclasses
+    tree = build_tree("lsm_opd", width)
+    tree.cfg = dataclasses.replace(tree.cfg, filter_backend=backend)
+    load_tree(tree, n, width)
+    rows = []
+    for k in (ks or BATCH_KS):
+        preds = _batch_preds(k)
+        snap = tree.snapshot()  # shared snapshot: both paths scan the same state
+        # warm up both paths so jit tracing is not billed to either side
+        _ = [tree.filter(p, snapshot=snap) for p in preds[:1]]
+        _ = tree.filter_many(preds, snapshot=snap)
+        t0 = time.perf_counter()
+        for _ in range(repeats):
+            seq = [tree.filter(p, snapshot=snap) for p in preds]
+        seq_s = (time.perf_counter() - t0) / repeats
+        t0 = time.perf_counter()
+        for _ in range(repeats):
+            bat = tree.filter_many(preds, snapshot=snap)
+        bat_s = (time.perf_counter() - t0) / repeats
+        assert all(np.array_equal(a.keys, b.keys) for a, b in zip(seq, bat))
+        speedup = seq_s / bat_s if bat_s > 0 else float("inf")
+        rows.append(BenchRow(
+            f"filter_batched/{backend}/k{k}", bat_s / k * 1e6,
+            {"seq_us_per_pred": seq_s / k * 1e6,
+             "batched_us_per_pred": bat_s / k * 1e6,
+             "speedup_per_pred": speedup,
+             "matches_total": sum(r.keys.shape[0] for r in bat)}))
+    return rows
+
+
+def run_scan_server(n: int = 60_000, width: int = 128, k: int = 16,
+                    max_batch: int = 16) -> List[BenchRow]:
+    """End-to-end serving path: submit K predicates, drain in batches."""
+    import dataclasses
+    from repro.serving.scan_server import ScanServer
+    tree = build_tree("lsm_opd", width)
+    tree.cfg = dataclasses.replace(tree.cfg, filter_backend="jax_packed")
+    load_tree(tree, n, width)
+    srv = ScanServer(tree, max_batch=max_batch)
+    preds = _batch_preds(k)
+    t0 = time.perf_counter()
+    out = srv.run(preds)
+    dt = time.perf_counter() - t0
+    return [BenchRow(f"scan_server/k{k}/b{max_batch}", dt / k * 1e6,
+                     {"batches": srv.stats.n_batches,
+                      "mean_batch": srv.stats.mean_batch,
+                      "matches_total": sum(r.keys.shape[0] for r in out.values())})]
+
+
 if __name__ == "__main__":
-    for r in run() + run_selectivity() + run_backends():
-        print(r.csv())
+    if "--batch" in sys.argv:
+        try:
+            k = int(sys.argv[sys.argv.index("--batch") + 1])
+        except (IndexError, ValueError):
+            sys.exit("usage: bench_filter.py [--batch K]  (K = predicates per batch)")
+        for r in run_batched(ks=[k]) + run_scan_server(k=k, max_batch=k):
+            print(r.csv())
+    else:
+        for r in (run() + run_selectivity() + run_backends()
+                  + run_batched() + run_scan_server()):
+            print(r.csv())

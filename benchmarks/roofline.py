@@ -1,5 +1,5 @@
 """Roofline report: reads the dry-run JSON records and renders the
-EXPERIMENTS.md tables (§Dry-run, §Roofline)."""
+docs/EXPERIMENTS.md tables (§Dry-run, §Roofline)."""
 
 from __future__ import annotations
 

@@ -4,7 +4,8 @@
 32001 (padded for TP), ssm_state 16.  Parallel attention + mamba heads
 per block; attention uses a 2048-token sliding window (Hymba combines
 global+local attention — the windowed form is what makes `long_500k`
-sub-quadratic and is noted as an adaptation in DESIGN.md).  25 heads is
+sub-quadratic and is noted as an adaptation in docs/DESIGN.md §6).  25
+heads is
 not TP-divisible -> 'seqq' attention mode."""
 
 from repro.configs.base import ArchConfig, SSMCfg, register

@@ -4,7 +4,7 @@ Encoder-decoder, 12L each side, d_model 768, 12 heads (kv=12), d_ff
 3072, vocab 51865 (padded for TP).  The conv audio frontend is a STUB
 per the assignment: ``input_specs()`` provides precomputed frame
 embeddings [B, S, 768] for the encoder; sinusoidal positions are used
-in place of Whisper's learned embeddings (noted in DESIGN.md).  12
+in place of Whisper's learned embeddings (noted in docs/DESIGN.md §6).  12
 heads is not TP-divisible -> 'seqq' attention mode."""
 
 from repro.configs.base import ArchConfig, register

@@ -164,7 +164,7 @@ def _remap_codes(
         used_masks.append(m)
     # reverse index + new OPD: sorted-array merge of the used dictionary
     # entries (paper's RBTree replaced by branch-free searchsorted — see
-    # DESIGN.md hardware-adaptation table).
+    # the docs/DESIGN.md §2 hardware-adaptation table).
     new_opd, remaps = OPD.merge_subset([s.opd for s in inputs], used_masks)
     ncmp = sum(int(m.sum()) for m in used_masks)
     # index table: flattened <src, ev> -> ev' (O(1) gather per entry)

@@ -22,7 +22,8 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.core.compaction import merge_scts
-from repro.core.filter_exec import FilterResult, evaluate_filter
+from repro.core.filter_exec import (FilterResult, evaluate_filter,
+                                    evaluate_filter_many)
 from repro.core.iterator import range_scan
 from repro.core.memtable import MemTable
 from repro.core.opd import Predicate
@@ -336,6 +337,18 @@ class LSMTree:
         snap = snapshot or self.snapshot()
         return evaluate_filter(
             snap.runs, snap.memtable, pred,
+            stats=self.filter_stats, store=self.store, blob_mgr=self.blob_mgr,
+            snapshot_seqno=snap.seqno, backend=self.cfg.filter_backend,
+        )
+
+    def filter_many(self, preds: List[Predicate],
+                    snapshot: Optional[Snapshot] = None) -> List[FilterResult]:
+        """Batched filter: all predicates share one pass over every run
+        (and, on 'jax_packed', one ``multi_filter`` kernel launch per
+        run), against a single consistent snapshot."""
+        snap = snapshot or self.snapshot()
+        return evaluate_filter_many(
+            snap.runs, snap.memtable, preds,
             stats=self.filter_stats, store=self.store, blob_mgr=self.blob_mgr,
             snapshot_seqno=snap.seqno, backend=self.cfg.filter_backend,
         )

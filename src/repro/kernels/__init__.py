@@ -1,6 +1,8 @@
 # Pallas TPU kernels (validated in interpret mode on CPU) + jnp oracles.
 # opd_filter / packed_filter / bitpack: the paper's SIMD filter pipeline,
-# TPU-native; bloom_probe: batched lookups; ssm_scan: serving recurrence.
+# TPU-native; multi_filter: K predicates in one pass over packed words
+# (the batched scan executor's kernel); bloom_probe: batched lookups;
+# ssm_scan: serving recurrence.
 from repro.kernels import ops, ref
 
 __all__ = ["ops", "ref"]

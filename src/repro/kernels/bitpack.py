@@ -5,7 +5,7 @@ Layout: codes are grouped per-word along the *sublane* axis —
 ``codes[M, per, 128] -> words[M, 128]`` with lane k of words[m, :]
 holding codes[m, k, :].  Shift/or trees run entirely on the VPU; widths
 are power-of-two (see ``core.sct.pack_width``) so fields never straddle
-words (the TPU-friendly restriction adopted in DESIGN.md).
+words (the TPU-friendly restriction adopted in docs/DESIGN.md §3).
 """
 
 from __future__ import annotations

@@ -17,6 +17,7 @@ import numpy as np
 
 from repro.kernels import bitpack as _bitpack
 from repro.kernels import bloom_probe as _bloom
+from repro.kernels import multi_filter as _multi_filter
 from repro.kernels import opd_filter as _opd_filter
 from repro.kernels import packed_filter as _packed_filter
 from repro.kernels import ssm_scan as _ssm
@@ -75,6 +76,25 @@ def range_filter_packed(words, width: int, lo: int, hi: int,
         flat, jnp.uint32(lo), jnp.uint32(hi),
         width=width, block_rows=block_rows, interpret=INTERPRET)
     return np.asarray(bitmap).reshape(-1)[:m]
+
+
+def multi_range_filter_packed(words, width: int, ranges,
+                              block_rows: int = 256) -> np.ndarray:
+    """K predicates, one pass: uint32 bitmaps [K, len(words)].
+
+    ``ranges`` is (K, 2) inclusive [lo, hi] code ranges; lo > hi encodes
+    the empty range.  Row k is bit-identical to
+    ``range_filter_packed(words, width, lo_k, hi_k)`` — the batched
+    kernel only amortizes the word read + field extraction over K.
+    """
+    words = jnp.asarray(words, jnp.uint32)
+    ranges = jnp.asarray(np.asarray(ranges, np.uint32).reshape(-1, 2))
+    m = words.shape[0]
+    flat = _pad_rows(words.reshape(-1), LANES * block_rows, np.uint32(0xFFFFFFFF))
+    flat = flat.reshape(-1, LANES)
+    bitmaps, _ = _multi_filter.multi_range_filter_packed_2d(
+        flat, ranges, width=width, block_rows=block_rows, interpret=INTERPRET)
+    return np.asarray(bitmaps).reshape(ranges.shape[0], -1)[:, :m]
 
 
 def bitmap_to_mask(bitmap: np.ndarray, width: int, n: int) -> np.ndarray:

@@ -66,6 +66,19 @@ def range_filter_packed(words: jax.Array, width: int, lo, hi) -> jax.Array:
 
 
 # --------------------------------------------------------------------------- #
+# multi_filter: K range predicates in one pass over packed words
+# --------------------------------------------------------------------------- #
+def multi_range_filter_packed(words: jax.Array, width: int,
+                              ranges: jax.Array) -> jax.Array:
+    """Batched oracle: ranges uint32 [K, 2] (inclusive [lo, hi]; lo > hi
+    means the empty range) -> uint32 bitmaps [K, W].  Row k must equal
+    ``range_filter_packed(words, width, lo_k, hi_k)`` bit-exactly."""
+    rows = [range_filter_packed(words, width, ranges[k, 0], ranges[k, 1])
+            for k in range(ranges.shape[0])]
+    return jnp.stack(rows, axis=0)
+
+
+# --------------------------------------------------------------------------- #
 # bloom_probe: batched block-bloom membership probe
 # --------------------------------------------------------------------------- #
 BLOOM_SEEDS32 = (0x9E3779B9, 0x85EBCA6B, 0xC2B2AE35, 0x27D4EB2F, 0x165667B1, 0x9E377969)

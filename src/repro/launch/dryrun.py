@@ -64,6 +64,16 @@ DTYPE_BYTES = {"pred": 1, "s4": 0.5, "u4": 0.5, "s8": 1, "u8": 1, "s16": 2,
                "f8e4m3fn": 1, "f8e5m2": 1}
 
 
+def cost_analysis_dict(compiled) -> Dict[str, float]:
+    """Version-compat: ``compiled.cost_analysis()`` returns a single dict
+    on newer jax but a per-program list of dicts on older releases
+    (e.g. 0.4.x).  Normalize to one dict (the single SPMD program)."""
+    ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca
+
+
 def _shape_bytes(text: str) -> float:
     total = 0.0
     for dt, dims in SHAPE_RE.findall(text):
@@ -266,7 +276,7 @@ def _measure_unrolled(cfg, shape, mesh, variant) -> Dict[str, Any]:
         compiled = lowered.compile()
     finally:
         flags.unroll_scans = False
-    ca = compiled.cost_analysis() or {}
+    ca = cost_analysis_dict(compiled)
     coll = parse_collectives(compiled.as_text(),
                              default_group=mesh.shape["model"])
     return {
@@ -282,7 +292,7 @@ def analysis_terms(cfg, shape, mesh, variant) -> Dict[str, Any]:
     microbatch-invariant, HBM/collective bytes are therefore best-case.
     Hillclimb variants that sweep microbatch counts set
     ``analysis_microbatches`` explicitly so the per-microbatch parameter
-    re-gather traffic becomes visible (see EXPERIMENTS.md §Perf)."""
+    re-gather traffic becomes visible (see docs/EXPERIMENTS.md §Perf)."""
     avariant = dict(variant)
     avariant["microbatches"] = int(variant.get("analysis_microbatches", 1))
     if cfg.has_ssm and shape.kind != "decode":
@@ -350,7 +360,7 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
         rec["memory_error"] = str(e)
 
     # ---- cost analysis (raw, rolled — loop bodies counted once) ------------ #
-    ca = compiled.cost_analysis() or {}
+    ca = cost_analysis_dict(compiled)
     rec["flops_rolled_raw"] = float(ca.get("flops", 0.0))
     rec["hlo_bytes"] = len(compiled.as_text())
 

@@ -3,7 +3,8 @@
 The conv audio frontend is a stub per the assignment: the encoder
 consumes precomputed frame embeddings [B, S_enc, d_model] from
 ``input_specs()``.  Sinusoidal positions stand in for Whisper's
-learned/sinusoidal tables (DESIGN.md notes the swap).  The decoder is a
+learned/sinusoidal tables (docs/DESIGN.md §6 notes the swap).  The
+decoder is a
 standard causal LM with per-layer cross-attention over the encoder
 output; decode carries a growing self-attention cache plus static
 cross-attention K/V computed once at prefill.

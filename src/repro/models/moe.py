@@ -99,7 +99,7 @@ def moe_ffn_ep(x: jax.Array, p, cfg: MoECfg, mesh) -> Tuple[jax.Array, jax.Array
 
     Capacity is per (data-shard, expert) rather than global — an accepted
     semantic shift shared by standard EP implementations (noted in
-    EXPERIMENTS.md §Perf)."""
+    docs/EXPERIMENTS.md §Perf)."""
     from jax.sharding import PartitionSpec as P
     from repro.parallel.sharding import dp_axes
 

@@ -7,7 +7,7 @@ extends data parallelism across the DCN (only gradient all-reduce
 crosses pods by default; `fsdp_over_pod` additionally ZeRO-shards across
 pods for the very largest configs).
 
-Attention sharding mode is chosen per architecture (DESIGN.md §5):
+Attention sharding mode is chosen per architecture (docs/DESIGN.md §5):
   'head'  q-heads sharded over `model`; K/V (fewer GQA heads) kept whole
           and broadcast-repeated to q-heads inside the kernel.
   'seqq'  for head counts not divisible by TP (deepseek 56H, hymba 25H,
@@ -27,6 +27,20 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 SINGLE_POD_AXES = ("data", "model")
 MULTI_POD_AXES = ("pod", "data", "model")
+
+
+def compat_make_mesh(shape: Sequence[int], axis_names: Sequence[str]) -> Mesh:
+    """Version-compat mesh constructor (docs/DESIGN.md §5).
+
+    ``jax.sharding.AxisType`` (explicit/auto axis types) only exists in
+    newer jax releases; request Auto axes when available and fall back
+    to the plain constructor — semantically identical, since Auto is
+    the pre-AxisType behavior — on older jax."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        return jax.make_mesh(tuple(shape), tuple(axis_names),
+                             axis_types=(axis_type.Auto,) * len(axis_names))
+    return jax.make_mesh(tuple(shape), tuple(axis_names))
 
 
 def dp_axes(mesh: Mesh) -> Tuple[str, ...]:

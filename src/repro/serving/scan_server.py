@@ -1,0 +1,116 @@
+"""Continuous-batching scan server over the LSM-OPD engine.
+
+The serving-side counterpart of ``serving.engine``: where the token
+engine keeps B decode slots busy and refills finished slots from a
+request queue, the scan server keeps B *predicate* slots busy and
+drains them through ``LSMTree.filter_many`` — every occupied slot rides
+the same single pass over each SCT's packed column (one HBM read + one
+``kernels.multi_filter`` launch per run, amortized over the batch).
+
+Flow: clients ``submit`` predicates -> requests queue -> each ``step``
+fills up to ``max_batch`` slots, pins ONE engine snapshot for the whole
+batch (every query in a batch sees the same consistent state), executes
+the batched filter, completes all slots, and refills from the queue.
+``drain`` steps until the queue is empty — the scan analogue of running
+the decode loop until all sequences finish.
+
+Writes may interleave between batches (each batch re-snapshots), which
+is exactly the MVCC behavior a per-query snapshot would give, minus the
+K-1 redundant column passes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+from repro.core.filter_exec import FilterResult
+from repro.core.lsm import LSMTree, Snapshot
+from repro.core.opd import Predicate
+
+
+@dataclasses.dataclass
+class ScanRequest:
+    rid: int
+    pred: Predicate
+    submitted_at: float = 0.0
+    result: Optional[FilterResult] = None
+    done: bool = False
+
+
+@dataclasses.dataclass
+class ScanServerStats:
+    n_submitted: int = 0
+    n_served: int = 0
+    n_batches: int = 0
+    batch_sizes: List[int] = dataclasses.field(default_factory=list)
+    wait_seconds: List[float] = dataclasses.field(default_factory=list)
+
+    @property
+    def mean_batch(self) -> float:
+        return (sum(self.batch_sizes) / len(self.batch_sizes)
+                if self.batch_sizes else 0.0)
+
+
+class ScanServer:
+    def __init__(self, tree: LSMTree, max_batch: int = 16):
+        assert max_batch >= 1
+        self.tree = tree
+        self.max_batch = max_batch
+        self.queue: List[ScanRequest] = []
+        self.stats = ScanServerStats()
+        self._next_rid = 0
+
+    # ------------------------------------------------------------------ #
+    # client side
+    # ------------------------------------------------------------------ #
+    def submit(self, pred: Predicate) -> int:
+        """Enqueue one predicate; returns a request id resolved by drain."""
+        rid = self._next_rid
+        self._next_rid += 1
+        self.queue.append(ScanRequest(rid, pred, time.perf_counter()))
+        self.stats.n_submitted += 1
+        return rid
+
+    def submit_many(self, preds: List[Predicate]) -> List[int]:
+        return [self.submit(p) for p in preds]
+
+    # ------------------------------------------------------------------ #
+    # server side
+    # ------------------------------------------------------------------ #
+    def step(self, snapshot: Optional[Snapshot] = None) -> Dict[int, FilterResult]:
+        """Fill up to ``max_batch`` slots from the queue and execute them
+        as ONE batched filter against a single pinned snapshot."""
+        if not self.queue:
+            return {}
+        slots = self.queue[: self.max_batch]
+        now = time.perf_counter()
+        # dequeue only after the batch succeeds: a failing filter_many
+        # leaves the requests queued for a retry instead of losing them
+        results = self.tree.filter_many([r.pred for r in slots],
+                                        snapshot=snapshot)
+        del self.queue[: len(slots)]
+        out: Dict[int, FilterResult] = {}
+        for r, res in zip(slots, results):
+            r.result = res
+            r.done = True
+            out[r.rid] = res
+            self.stats.wait_seconds.append(now - r.submitted_at)
+        self.stats.n_batches += 1
+        self.stats.n_served += len(slots)
+        self.stats.batch_sizes.append(len(slots))
+        return out
+
+    def drain(self) -> Dict[int, FilterResult]:
+        """Step until the queue is empty (continuous batching: each step
+        re-fills from whatever has been submitted since)."""
+        out: Dict[int, FilterResult] = {}
+        while self.queue:
+            out.update(self.step())
+        return out
+
+    def run(self, preds: List[Predicate]) -> Dict[int, FilterResult]:
+        """Convenience: submit a workload and drain it."""
+        self.submit_many(preds)
+        return self.drain()

@@ -1,0 +1,33 @@
+"""Optional-dependency shim for hypothesis (see requirements-dev.txt).
+
+Property tests import ``given``/``settings``/``st`` from here instead of
+from hypothesis directly: when hypothesis is installed they run
+normally; when it is absent the stand-ins below keep the module
+importable (strategy expressions evaluate at collect time) and mark
+every ``@given`` test as skipped, so the tier-1 suite always collects.
+"""
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        """Absorbs any strategy expression (st.lists(...).filter(...))."""
+
+        def __call__(self, *args, **kwargs):
+            return self
+
+        def __getattr__(self, name):
+            return self
+
+    st = _Strategy()
+
+    def given(*args, **kwargs):
+        return lambda f: pytest.mark.skip(reason="hypothesis not installed")(f)
+
+    def settings(*args, **kwargs):
+        return lambda f: f

@@ -53,16 +53,14 @@ def test_mini_dryrun_subprocess(tmp_path):
         import repro.launch.dryrun as dr
         from repro.configs.base import get_config, ShapeCfg
         from repro.models.registry import build_model, input_specs, batch_pspec
-        from repro.parallel.sharding import tree_shardings
-        import jax.sharding as jsh
+        from repro.parallel.sharding import compat_make_mesh, tree_shardings
 
-        mesh = jax.make_mesh((4, 2), ("data", "model"),
-                             axis_types=(jsh.AxisType.Auto,) * 2)
+        mesh = compat_make_mesh((4, 2), ("data", "model"))
         cfg = get_config("llama3-8b").reduced()
         shape = ShapeCfg("mini_train", 64, 8, "train")
         fn, args, _ = dr.build_step(cfg, shape, mesh, {"microbatches": 2})
         compiled = fn.lower(args[0], args[1]).compile()
-        ca = compiled.cost_analysis() or {}
+        ca = dr.cost_analysis_dict(compiled)
         coll = dr.parse_collectives(compiled.as_text(), 2)
         print(json.dumps({"flops": float(ca.get("flops", 0)),
                           "coll_count": coll["count"]}))

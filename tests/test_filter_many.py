@@ -1,0 +1,227 @@
+"""Batched multi-predicate scan executor: kernel-level parity with the
+single-predicate kernel and oracle, engine-level parity of
+``evaluate_filter_many`` vs K independent ``evaluate_filter`` calls
+across all backends and pack widths, and the ScanServer drain path."""
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis import given, settings, st
+
+from repro.core import LSMConfig, LSMTree, Predicate
+from repro.core.sct import bitpack as np_bitpack
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(7)
+ALL_WIDTHS = [1, 2, 4, 8, 16, 32]
+
+
+def _random_ranges(k: int, width: int, rng) -> np.ndarray:
+    """(k, 2) inclusive uint32 ranges incl. empty (lo > hi) sentinels."""
+    maxv = 2 ** min(width, 16)
+    out = []
+    for i in range(k):
+        if i % 4 == 3:
+            out.append((1, 0))  # empty range
+        else:
+            a, b = sorted(rng.integers(0, maxv, 2).tolist())
+            out.append((a, b))
+    return np.asarray(out, np.uint32)
+
+
+# --------------------------------------------------------------------------- #
+# kernel level: multi_filter == K x packed_filter == oracle
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("width", ALL_WIDTHS)
+@pytest.mark.parametrize("k", [1, 3, 16])
+def test_multi_filter_matches_single_and_oracle(width, k):
+    n = 20000
+    codes = RNG.integers(0, 2 ** min(width, 16), n).astype(np.int32)
+    words = np_bitpack(codes, width)
+    ranges = _random_ranges(k, width, RNG)
+    got = ops.multi_range_filter_packed(words, width, ranges)
+    assert got.shape == (k, words.shape[0])
+    exp_ref = np.asarray(ref.multi_range_filter_packed(
+        jnp.asarray(words), width, jnp.asarray(ranges)))
+    assert np.array_equal(got, exp_ref)
+    for q in range(k):
+        lo, hi = int(ranges[q, 0]), int(ranges[q, 1])
+        single = (ops.range_filter_packed(words, width, lo, hi)
+                  if lo <= hi else np.zeros_like(words))
+        assert np.array_equal(got[q], single), (width, q)
+        mask = ops.bitmap_to_mask(got[q], width, n)
+        assert np.array_equal(mask, (codes >= lo) & (codes <= hi))
+
+
+@given(st.integers(1, 12), st.integers(0, 2**31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_multi_filter_property(k, seed):
+    rng = np.random.default_rng(seed)
+    width = int(rng.choice([2, 4, 8, 16]))
+    n = int(rng.integers(1, 9000))
+    codes = rng.integers(0, 2 ** min(width, 16), n).astype(np.int32)
+    words = np_bitpack(codes, width)
+    ranges = _random_ranges(k, width, rng)
+    got = ops.multi_range_filter_packed(words, width, ranges)
+    exp = np.asarray(ref.multi_range_filter_packed(
+        jnp.asarray(words), width, jnp.asarray(ranges)))
+    assert np.array_equal(got, exp)
+
+
+# --------------------------------------------------------------------------- #
+# engine level: filter_many == K x filter, all backends, all pack widths
+# --------------------------------------------------------------------------- #
+def _tree_with_ndv(backend: str, ndv: int, n: int = 3000,
+                   seed: int = 11) -> LSMTree:
+    """ndv distinct values -> code_bits spans the pack widths under test."""
+    t = LSMTree(LSMConfig(codec="opd", value_width=24, file_bytes=16 * 1024,
+                          l0_limit=2, size_ratio=3, filter_backend=backend))
+    rng = np.random.default_rng(seed)
+    for _ in range(n):
+        t.put(int(rng.integers(0, 2000)),
+              b"tag_%05d" % int(rng.integers(0, ndv)))
+    return t
+
+
+def _pred_batch(ndv: int):
+    return [
+        Predicate("prefix", b"tag_0"),
+        Predicate("eq", b"tag_%05d" % (ndv // 2)),
+        Predicate("range", b"tag_%05d" % (ndv // 4), b"tag_%05d" % (ndv // 2)),
+        Predicate("ge", b"tag_%05d" % (3 * ndv // 4)),
+        Predicate("le", b"", b"tag_%05d" % (ndv // 8)),
+        Predicate("prefix", b"zzz"),            # matches nothing
+    ]
+
+
+@pytest.mark.parametrize("backend", ["numpy", "jax", "jax_packed"])
+@pytest.mark.parametrize("ndv", [2, 3, 9, 200, 40000])
+def test_filter_many_parity_backends_widths(backend, ndv):
+    # ndv 2/3/9/200/40000 -> pack widths 1/2/4/8/16 across the tree's SCTs
+    t = _tree_with_ndv(backend, ndv)
+    if backend == "jax_packed":
+        widths = {s.code_bits for lvl in t.levels for s in lvl}
+        assert widths, "tree must have flushed SCTs"
+    preds = _pred_batch(ndv)
+    snap = t.snapshot()
+    many = t.filter_many(preds, snapshot=snap)
+    assert len(many) == len(preds)
+    for p, m in zip(preds, many):
+        s = t.filter(p, snapshot=snap)
+        assert np.array_equal(m.keys, s.keys), (backend, ndv, p)
+        assert np.array_equal(m.values, s.values), (backend, ndv, p)
+        assert m.n_scanned == s.n_scanned
+        assert m.n_matched_raw == s.n_matched_raw
+
+
+def test_filter_many_width32():
+    """code_bits 32 (pack width 32) via a >64k-NDV single flush."""
+    t = LSMTree(LSMConfig(codec="opd", value_width=24,
+                          file_bytes=8 * 2 ** 20, filter_backend="jax_packed"))
+    for i in range(70000):
+        t.put(i, b"v_%06d" % i)
+    t.flush()
+    widths = {s.code_bits for lvl in t.levels for s in lvl}
+    assert 32 in widths
+    preds = [Predicate("prefix", b"v_0"), Predicate("ge", b"v_069000")]
+    snap = t.snapshot()
+    for p, m in zip(preds, t.filter_many(preds, snapshot=snap)):
+        s = t.filter(p, snapshot=snap)
+        assert np.array_equal(m.keys, s.keys)
+
+
+@given(st.lists(st.integers(0, 39), min_size=1, max_size=24),
+       st.integers(0, 2**31 - 1))
+@settings(max_examples=15, deadline=None)
+def test_filter_many_property_random_batches(tags, seed):
+    """Random predicate batches (with duplicates) match per-pred filters."""
+    t = _tree_with_ndv("jax_packed", 40, n=2000, seed=seed % 1000)
+    preds = [Predicate("prefix", b"tag_000%02d" % g) for g in tags]
+    snap = t.snapshot()
+    many = t.filter_many(preds, snapshot=snap)
+    for p, m in zip(preds, many):
+        s = t.filter(p, snapshot=snap)
+        assert np.array_equal(m.keys, s.keys)
+        assert np.array_equal(m.values, s.values)
+
+
+@pytest.mark.parametrize("codec", ["plain", "heavy", "blob"])
+def test_filter_many_parity_competitor_codecs(codec):
+    t = LSMTree(LSMConfig(codec=codec, value_width=24, file_bytes=16 * 1024,
+                          l0_limit=2, size_ratio=3))
+    rng = np.random.default_rng(3)
+    for _ in range(2000):
+        t.put(int(rng.integers(0, 1500)), b"tag_%05d" % int(rng.integers(0, 50)))
+    preds = _pred_batch(50)
+    snap = t.snapshot()
+    for p, m in zip(preds, t.filter_many(preds, snapshot=snap)):
+        s = t.filter(p, snapshot=snap)
+        assert np.array_equal(m.keys, s.keys), (codec, p)
+        assert np.array_equal(m.values, s.values), (codec, p)
+
+
+def test_filter_many_sees_memtable_and_mvcc():
+    """Unflushed writes and snapshot isolation behave like single filter."""
+    t = _tree_with_ndv("numpy", 20, n=500)
+    snap_old = t.snapshot()
+    t.put(999999, b"tag_00000")  # memtable-only write
+    pred = Predicate("prefix", b"tag_00000")
+    new = t.filter_many([pred])[0]
+    assert 999999 in new.keys.tolist()
+    old = t.filter_many([pred], snapshot=snap_old)[0]
+    assert 999999 not in old.keys.tolist()
+    assert np.array_equal(old.keys, t.filter(pred, snapshot=snap_old).keys)
+
+
+def test_filter_many_empty_batch():
+    t = _tree_with_ndv("numpy", 20, n=200)
+    assert t.filter_many([]) == []
+
+
+def test_filter_many_amortizes_io():
+    """The batched pass reads each run once, not once per predicate."""
+    t = _tree_with_ndv("numpy", 200, n=2000)
+    preds = _pred_batch(200)
+    snap = t.snapshot()
+    io0 = t.store.stats.snapshot()
+    t.filter_many(preds, snapshot=snap)
+    batched = t.store.stats.delta(io0).bytes_read
+    io1 = t.store.stats.snapshot()
+    for p in preds:
+        t.filter(p, snapshot=snap)
+    sequential = t.store.stats.delta(io1).bytes_read
+    assert batched * len(preds) == sequential
+
+
+# --------------------------------------------------------------------------- #
+# serving: ScanServer queue/drain
+# --------------------------------------------------------------------------- #
+def test_scan_server_drains_in_batches():
+    from repro.serving.scan_server import ScanServer
+
+    t = _tree_with_ndv("jax_packed", 200, n=2000)
+    srv = ScanServer(t, max_batch=4)
+    preds = [Predicate("prefix", b"tag_000%02d" % (i % 7)) for i in range(10)]
+    rids = srv.submit_many(preds)
+    out = srv.drain()
+    assert set(out) == set(rids)
+    assert srv.stats.batch_sizes == [4, 4, 2]
+    assert srv.stats.n_served == 10 and srv.stats.n_batches == 3
+    for rid, p in zip(rids, preds):
+        assert np.array_equal(out[rid].keys, t.filter(p).keys)
+
+
+def test_scan_server_continuous_refill():
+    from repro.serving.scan_server import ScanServer
+
+    t = _tree_with_ndv("numpy", 50, n=800)
+    srv = ScanServer(t, max_batch=8)
+    srv.submit(Predicate("prefix", b"tag_"))
+    first = srv.step()
+    assert len(first) == 1 and srv.step() == {}
+    # new arrivals after a drain are picked up by the next step
+    srv.submit_many([Predicate("prefix", b"tag_00001")] * 3)
+    assert len(srv.drain()) == 3
+    assert srv.stats.mean_batch == pytest.approx((1 + 3) / 2)

@@ -4,7 +4,7 @@ in kernels/ref.py (interpret mode on CPU)."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis import given, settings, st
 
 from repro.core.sct import bitpack as np_bitpack, bitunpack as np_bitunpack
 from repro.kernels import ops, ref

@@ -6,7 +6,7 @@ stale-version shadowing, MVCC snapshots, compaction invariants
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis import given, settings, st
 
 from repro.core import LSMConfig, LSMTree, Predicate
 

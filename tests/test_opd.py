@@ -3,7 +3,7 @@ transform, Algorithm-1 dictionary merge."""
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis import given, settings, st
 
 from repro.core.opd import OPD, Predicate, as_fixed_bytes
 

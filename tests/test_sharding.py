@@ -6,15 +6,13 @@ import pytest
 from jax.sharding import PartitionSpec as P
 
 import jax
-from repro.parallel.sharding import attn_mode, safe_spec
+from repro.parallel.sharding import attn_mode, compat_make_mesh, safe_spec
 from repro.runtime.elastic import derive_mesh_shape
 
 
 @pytest.fixture(scope="module")
 def mesh():
-    import jax.sharding as jsh
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jsh.AxisType.Auto,) * 2)
+    return compat_make_mesh((1, 1), ("data", "model"))
 
 
 def test_safe_spec_drops_nondivisible(mesh):
