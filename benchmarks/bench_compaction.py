@@ -1,24 +1,36 @@
 """Figure 7: compaction cost vs value size — total compaction CPU
 seconds (with the paper's seven-stage breakdown), compaction I/O bytes,
-and modeled wall time per device class, for each system."""
+and modeled wall time per device class, for each system.
+
+``--backend`` sweeps the pluggable compaction backends ('numpy' | 'jax'
+| 'jax_packed', see docs/DESIGN.md §7) over an identical lsm_opd
+workload: one tree per backend, reporting the encode-stage seconds, the
+speedup vs the numpy reference, and ``dict_compares`` — which MUST be
+identical across backends (the backends change *where* the remap runs,
+never how much dictionary work the merge does).  Methodology in
+docs/EXPERIMENTS.md §bench-compaction.
+"""
 
 from __future__ import annotations
 
-from typing import List
+import sys
+from typing import List, Optional, Sequence
 
 from benchmarks._harness import (BenchRow, SYSTEMS, build_tree, io_seconds,
                                  load_tree)
 from repro.storage.devices import DEVICES
 
 VALUE_SIZES = [32, 128, 512, 1024]
+COMPACTION_BACKENDS = ["numpy", "jax", "jax_packed"]
 
 
 def run(n: int = 60_000, systems=None, value_sizes=None,
-        ndv_ratio: float = 0.01, zipf_s: float = 0.0) -> List[BenchRow]:
+        ndv_ratio: float = 0.01, zipf_s: float = 0.0,
+        backend: str = "numpy") -> List[BenchRow]:
     rows = []
     for width in (value_sizes or VALUE_SIZES):
         for system in (systems or SYSTEMS):
-            tree = build_tree(system, width)
+            tree = build_tree(system, width, compaction_backend=backend)
             load_tree(tree, n, width, ndv_ratio, zipf_s)
             st = tree.compaction_stats
             cpu_s = st.total()
@@ -31,6 +43,7 @@ def run(n: int = 60_000, systems=None, value_sizes=None,
                 "merge_s": st.seconds.get("merge", 0.0),
                 "encode_s": st.seconds.get("encode", 0.0),
                 "dict_mb": tree.dict_bytes / 2**20,
+                "dict_compares": tree.dict_compares,
             }
             for dev_name, dev in DEVICES.items():
                 derived[f"wall_s_{dev_name}"] = cpu_s + \
@@ -42,6 +55,60 @@ def run(n: int = 60_000, systems=None, value_sizes=None,
     return rows
 
 
+def run_backend_sweep(n: int = 40_000, width: int = 128,
+                      backends: Optional[Sequence[str]] = None,
+                      ndv_ratio: float = 0.01) -> List[BenchRow]:
+    """One lsm_opd tree per compaction backend, identical workload.
+
+    The numpy reference always runs first (it is the speedup baseline and
+    the dict_compares parity anchor).  On a CPU-only container the Pallas
+    backends execute in interpret mode, so `encode_speedup_vs_numpy`
+    measures dispatch overhead rather than kernel throughput; on a real
+    TPU the same sweep compiles to Mosaic (docs/EXPERIMENTS.md).
+    """
+    want = list(backends or COMPACTION_BACKENDS)
+    order = ["numpy"] + [b for b in want if b != "numpy"]
+    rows, base_encode, base_compares = [], None, None
+    for backend in order:
+        tree = build_tree("lsm_opd", width, compaction_backend=backend)
+        load_tree(tree, n, width, ndv_ratio)
+        st = tree.compaction_stats
+        encode_s = st.seconds.get("encode", 0.0)
+        assert tree.n_compactions > 0, (
+            f"workload (n={n}, width={width}) triggered no compactions — "
+            "the parity/speedup numbers below would be vacuous")
+        if base_encode is None:
+            base_encode, base_compares = encode_s, tree.dict_compares
+        assert tree.dict_compares == base_compares, (
+            f"dict_compares parity violated: {backend} did "
+            f"{tree.dict_compares} vs numpy's {base_compares}")
+        rows.append(BenchRow(
+            f"compaction_backend/{backend}/v{width}",
+            encode_s * 1e6 / max(tree.n_compactions, 1),
+            {"encode_s": encode_s,
+             "encode_speedup_vs_numpy":
+                 base_encode / encode_s if encode_s > 0 else float("inf"),
+             "merge_s": st.seconds.get("merge", 0.0),
+             "total_cpu_s": st.total(),
+             "compactions": tree.n_compactions,
+             "dict_compares": tree.dict_compares,
+             "dict_compares_parity": 1.0,
+             "io_mb": (tree.compaction_in_bytes
+                       + tree.compaction_out_bytes) / 2**20}))
+    return rows
+
+
 if __name__ == "__main__":
-    for r in run():
-        print(r.csv())
+    if "--backend" in sys.argv:
+        i = sys.argv.index("--backend")
+        arg = sys.argv[i + 1] if len(sys.argv) > i + 1 else "all"
+        backends = COMPACTION_BACKENDS if arg == "all" else arg.split(",")
+        bad = [b for b in backends if b not in COMPACTION_BACKENDS]
+        if bad:
+            sys.exit(f"unknown backend(s) {bad}; "
+                     f"choose from {COMPACTION_BACKENDS} or 'all'")
+        for r in run_backend_sweep(backends=backends):
+            print(r.csv())
+    else:
+        for r in run():
+            print(r.csv())

@@ -19,6 +19,21 @@ What differs per codec is what happens to the *values*:
            paper's heavy-compression competitor).
   'blob'   pointers are copied (values untouched — WiscKey's advantage);
            dropped entries mark blob garbage for GC.
+
+The 'opd' encode stage is backend-pluggable (``backend=``, mirroring the
+filter path's ``filter_backend``; see docs/DESIGN.md §7):
+
+  'numpy'       host gather + host bitpack (the reference).
+  'jax'         the remap runs as the ``kernels.merge_remap`` Pallas
+                kernel (tiled table gather, SMEM offsets); packing stays
+                on the host.
+  'jax_packed'  remap fused with bit-packing in-kernel: output SCT
+                columns go to memory already packed and the remapped
+                int32 codes never materialize (``SCT.evs`` unpacks
+                lazily if a reader asks).
+
+All three produce bit-identical SCTs (tests/test_compaction_backends.py
+is the differential contract).
 """
 
 from __future__ import annotations
@@ -29,7 +44,7 @@ from typing import List, Optional, Tuple
 import numpy as np
 
 from repro.core.opd import OPD
-from repro.core.sct import SCT, BlobManager, build_sct
+from repro.core.sct import SCT, BlobManager, build_sct, pack_width
 from repro.core.stats import StageStats
 from repro.storage.io import FileStore
 
@@ -56,6 +71,7 @@ def merge_scts(
     blob_mgr: Optional[BlobManager] = None,
     block_bytes: int = 4096,
     bloom_bits_per_key: int = 10,
+    backend: str = "numpy",  # 'numpy' | 'jax' | 'jax_packed' ('opd' encode)
 ) -> CompactionResult:
     codec = inputs[0].codec
     n_in = sum(s.n for s in inputs)
@@ -113,6 +129,13 @@ def merge_scts(
     if codec == "blob" and blob_mgr is not None:
         _mark_blob_garbage(inputs, srcs, idxs, tombs, blob_mgr, n_in)
 
+    # hoisted once per merge (not per output chunk): old-code columns of
+    # the inputs, unpacked transiently for packed-only SCTs
+    src_codes: Optional[List[np.ndarray]] = None
+    if codec == "opd" and n_out:
+        with stats.time("encode"):
+            src_codes = [_source_codes(s, backend) for s in inputs]
+
     for lo in range(0, max(n_out, 1), file_entries):
         hi = min(lo + file_entries, n_out)
         if hi <= lo:
@@ -121,9 +144,11 @@ def merge_scts(
         c_src, c_idx = srcs[lo:hi], idxs[lo:hi]
         with stats.time("encode"):
             if codec == "opd":
-                encoded, ncmp = _remap_codes(inputs, c_src, c_idx, ct)
+                encoded, packed_encoded, ncmp = _remap_codes(
+                    inputs, src_codes, c_src, c_idx, ct, backend)
                 dict_compares += ncmp
-                out = build_sct(keys=ck, seqnos=cs, tombs=ct, encoded=encoded, **kwargs)
+                out = build_sct(keys=ck, seqnos=cs, tombs=ct, encoded=encoded,
+                                packed_encoded=packed_encoded, **kwargs)
             elif codec in ("plain", "heavy"):
                 vals = _gather_raw(raw_cols, c_src, c_idx, inputs[0].value_width)
                 out = build_sct(keys=ck, seqnos=cs, tombs=ct, raw_values=vals, **kwargs)
@@ -145,42 +170,71 @@ def merge_scts(
 # --------------------------------------------------------------------------- #
 def _remap_codes(
     inputs: List[SCT],
+    src_codes: List[np.ndarray],
     c_src: np.ndarray,
     c_idx: np.ndarray,
     c_tombs: np.ndarray,
-) -> Tuple[Tuple[np.ndarray, OPD], int]:
-    n_src = len(inputs)
+    backend: str = "numpy",
+) -> Tuple[Optional[Tuple[np.ndarray, OPD]],
+           Optional[Tuple[np.ndarray, int, OPD]], int]:
+    """Returns (encoded, packed_encoded, dict_compares): exactly one of
+    the first two is set — (evs, opd) for 'numpy'/'jax', or the
+    'jax_packed' fused result (packed words, pack width, opd).
+    ``src_codes`` are the inputs' old-code columns from ``_source_codes``
+    (hoisted by the caller so packed-only inputs unpack once per merge)."""
     old_evs = np.full(c_src.shape[0], -1, np.int32)
     used_masks = []
     for i, s in enumerate(inputs):
         sel = c_src == i
         if sel.any():
-            old_evs[sel] = s.evs[c_idx[sel]]
+            old_evs[sel] = src_codes[i][c_idx[sel]]
         m = np.zeros(s.opd.size, np.bool_)
         live = sel & ~c_tombs
         if live.any():
             cs = old_evs[live]
             m[cs[cs >= 0]] = True
         used_masks.append(m)
-    # reverse index + new OPD: sorted-array merge of the used dictionary
-    # entries (paper's RBTree replaced by branch-free searchsorted — see
-    # the docs/DESIGN.md §2 hardware-adaptation table).
-    new_opd, remaps = OPD.merge_subset([s.opd for s in inputs], used_masks)
+    # reverse index + new OPD: one fused sorted-array merge of the used
+    # dictionary entries (paper's RBTree replaced by branch-free
+    # searchsorted — see the docs/DESIGN.md §2 hardware-adaptation table).
+    # flat is the index table: flattened <src, ev> -> ev' (O(1) gather).
+    new_opd, flat, offsets = OPD.merge_subset_flat(
+        [s.opd for s in inputs], used_masks)
     ncmp = sum(int(m.sum()) for m in used_masks)
-    # index table: flattened <src, ev> -> ev' (O(1) gather per entry)
-    offsets = np.zeros(n_src + 1, np.int64)
-    for i, s in enumerate(inputs):
-        offsets[i + 1] = offsets[i] + s.opd.size
-    flat = (
-        np.concatenate(remaps)
-        if offsets[-1] > 0
-        else np.zeros(0, np.int32)
-    )
-    new_evs = np.full(c_src.shape[0], -1, np.int32)
-    live = (old_evs >= 0) & ~c_tombs
-    if live.any():
-        new_evs[live] = flat[old_evs[live].astype(np.int64) + offsets[c_src[live]]]
-    return (new_evs, new_opd), ncmp
+    if backend == "numpy":
+        new_evs = np.full(c_src.shape[0], -1, np.int32)
+        live = (old_evs >= 0) & ~c_tombs
+        if live.any():
+            new_evs[live] = flat[old_evs[live].astype(np.int64)
+                                 + offsets[c_src[live]]]
+        return (new_evs, new_opd), None, ncmp
+    from repro.kernels import ops as kops  # deferred: jax only on demand
+    ev_in = np.where(c_tombs, np.int32(-1), old_evs)
+    if backend == "jax":
+        new_evs = kops.remap_codes(ev_in, c_src, flat, offsets)
+        return (new_evs, new_opd), None, ncmp
+    if backend == "jax_packed":
+        width = pack_width(new_opd.code_bits)
+        words = kops.remap_pack_codes(ev_in, c_src, flat, offsets, width)
+        return None, (words, width, new_opd), ncmp
+    raise ValueError(f"unknown compaction backend {backend!r}")
+
+
+def _source_codes(s: SCT, backend: str) -> np.ndarray:
+    """Old-code column of one input SCT.  Packed-only inputs (written by
+    the 'jax_packed' backend) are unpacked *transiently* — on the jax
+    backends via the bitpack kernel — instead of through the caching
+    ``SCT.evs`` property, so merging a packed SCT does not permanently
+    materialize (and double-store) its unpacked column."""
+    if s._evs is not None or s.packed is None:
+        return s.evs
+    if backend == "numpy":
+        from repro.core.sct import bitunpack
+        codes = bitunpack(s.packed, s.code_bits, s.n)
+    else:
+        from repro.kernels import ops as kops
+        codes = kops.unpack_codes(s.packed, s.code_bits, s.n)
+    return np.where(s.tombs, np.int32(-1), codes)
 
 
 def _gather_raw(raw_cols, c_src, c_idx, width) -> np.ndarray:

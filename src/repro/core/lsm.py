@@ -17,7 +17,8 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, List, Optional, Tuple
+import weakref
+from typing import Dict, List, Optional, Set, Tuple
 
 import numpy as np
 
@@ -48,6 +49,7 @@ class LSMConfig:
     blob_compress: bool = False        # BlobDB + dictionary compression
     blob_gc_threshold: float = 0.5
     filter_backend: str = "numpy"      # 'numpy' | 'jax' | 'jax_packed'
+    compaction_backend: str = "numpy"  # 'numpy' | 'jax' | 'jax_packed'
 
     @property
     def mem_bytes(self) -> int:
@@ -85,6 +87,10 @@ class LSMTree:
         self.stall_seconds = 0.0
         self.compaction_in_bytes = 0
         self.compaction_out_bytes = 0
+        self.dict_compares = 0  # cumulative D_i terms across compactions
+        # weakrefs to handed-out snapshots: blob GC must not delete value
+        # logs a live snapshot can still address (see _gc_blobs)
+        self._snapshots: List["weakref.ref[Snapshot]"] = []
 
     # ------------------------------------------------------------------ #
     # geometry
@@ -119,8 +125,12 @@ class LSMTree:
         return total
 
     def all_runs(self, newest_first: bool = True) -> List[SCT]:
-        """L0 runs newest->oldest, then L1..Ln (sorted, non-overlapping)."""
-        runs = list(self.levels[0])
+        """L0 runs (newest->oldest, or oldest->newest when
+        ``newest_first=False``), then L1..Ln (sorted, non-overlapping).
+        Read paths require the default: first-match-wins point lookups
+        depend on newer L0 runs shadowing older ones."""
+        l0 = self.levels[0]
+        runs = list(l0) if newest_first else list(reversed(l0))
         for lvl in self.levels[1:]:
             runs.extend(lvl)
         return runs
@@ -229,8 +239,10 @@ class LSMTree:
             blob_mgr=self.blob_mgr,
             block_bytes=self.cfg.block_bytes,
             bloom_bits_per_key=self.cfg.bloom_bits_per_key,
+            backend=self.cfg.compaction_backend,
         )
         self.n_compactions += 1
+        self.dict_compares += res.dict_compares
         self.compaction_in_bytes += sum(s.disk_bytes for s in inputs)
         self.compaction_out_bytes += sum(s.disk_bytes for s in res.outputs)
         for lvl, gone in drop_in:
@@ -244,9 +256,34 @@ class LSMTree:
         if self.blob_mgr is not None:
             self._gc_blobs()
 
+    def _pinned_blob_fids(self) -> Set[int]:
+        """Blob files addressable through a live snapshot.  Snapshots pin
+        SCT objects directly (immutability), but blob *values* live in the
+        store — GC must defer deleting any log a pinned run points into,
+        or snapshot reads would dangle.  Dead weakrefs are pruned here, so
+        a dropped snapshot releases its files at the next GC pass."""
+        pinned: Set[int] = set()
+        alive = []
+        for ref in self._snapshots:
+            snap = ref()
+            if snap is None:
+                continue
+            alive.append(ref)
+            for s in snap.runs:
+                if s.vfids is not None and s.n:
+                    pinned.update(int(f) for f in np.unique(s.vfids)
+                                  if f >= 0)
+        self._snapshots = alive
+        return pinned
+
     def _gc_blobs(self) -> None:
-        """Rewrite blob files past the garbage threshold (BlobDB GC)."""
+        """Rewrite blob files past the garbage threshold (BlobDB GC).
+        Files pinned by a live snapshot are skipped — their garbage is
+        collected once the snapshot is released."""
+        pinned = self._pinned_blob_fids()
         for fid in self.blob_mgr.gc_candidates():
+            if fid in pinned:
+                continue
             refs = []
             for lvl in self.levels:
                 for s in lvl:
@@ -280,7 +317,13 @@ class LSMTree:
     # reads
     # ------------------------------------------------------------------ #
     def snapshot(self) -> Snapshot:
-        return Snapshot(self._seqno, self.memtable, self.all_runs())
+        snap = Snapshot(self._seqno, self.memtable, self.all_runs())
+        if self.blob_mgr is not None:
+            # registry only feeds blob-GC pinning; prune dead refs on the
+            # way in so read-heavy workloads never grow it unboundedly
+            self._snapshots = [r for r in self._snapshots if r() is not None]
+            self._snapshots.append(weakref.ref(snap))
+        return snap
 
     def get(self, key: int, snapshot: Optional[Snapshot] = None) -> Optional[bytes]:
         """point_lookup: memtable, then L0 newest->oldest, then L1..Ln."""
@@ -377,4 +420,5 @@ class LSMTree:
             "n_flushes": self.n_flushes,
             "n_compactions": self.n_compactions,
             "write_stalls": self.write_stalls,
+            "dict_compares": self.dict_compares,
         }

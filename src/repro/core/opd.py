@@ -197,27 +197,56 @@ class OPD:
         return new, remaps
 
     @staticmethod
+    def merge_subset_flat(
+        opds: Sequence["OPD"], used: Sequence[np.ndarray]
+    ) -> Tuple["OPD", np.ndarray, np.ndarray]:
+        """Vectorized Algorithm-1 dictionary rebuild for one output SCT.
+
+        ``used[i]`` is a bool mask over source dict i's codes.  All source
+        dictionaries are treated as ONE concatenated value array: a single
+        ``np.unique`` over the used entries is the sorted-array merge, and
+        a single ``searchsorted`` produces every remap at once — no
+        per-input Python loop, so the dictionary stage is one fused pass
+        regardless of fan-in (the TPU-friendly port of the paper's RBTree
+        reverse index, see docs/DESIGN.md §2/§7).
+
+        Returns ``(new_opd, flat, offsets)`` where ``flat`` is the
+        concatenated ``old_code -> new_code`` table (-1 at unused codes)
+        and ``offsets[i]`` is the base of source i's slice — exactly the
+        operand layout of ``kernels.merge_remap``:
+        ``new_code == flat[old_code + offsets[src]]``.
+        """
+        sizes = np.fromiter((o.size for o in opds), np.int64, len(opds))
+        offsets = np.zeros(len(opds) + 1, np.int64)
+        np.cumsum(sizes, out=offsets[1:])
+        total = int(offsets[-1])
+        dtype = opds[0].values.dtype
+        if total == 0:
+            return OPD(np.asarray([], dtype=dtype)), np.zeros(0, np.int32), offsets
+        # concatenate only the used entries (sel) — never the full value
+        # arrays — so the copy is proportional to the output dictionary
+        all_used = np.concatenate(used)
+        sel = np.concatenate([o.values[m] for o, m in zip(opds, used)])
+        new_vals = np.unique(sel)
+        flat = np.full(total, -1, np.int32)
+        flat[all_used] = np.searchsorted(new_vals, sel).astype(np.int32)
+        return OPD(new_vals), flat, offsets
+
+    @staticmethod
     def merge_subset(
         opds: Sequence["OPD"], used: Sequence[np.ndarray]
     ) -> Tuple["OPD", List[np.ndarray]]:
         """Merge restricted to codes actually used by an output subsequence.
 
-        ``used[i]`` is a bool mask over source dict i's codes.  This keeps
-        the output dictionary *dense* (Algorithm 1 rebuilds per output SCT
-        so codes stay in [0, D'): required for minimal bit-packing).
-        Unused source codes map to -1 in the remap tables.
+        This keeps the output dictionary *dense* (Algorithm 1 rebuilds per
+        output SCT so codes stay in [0, D'): required for minimal
+        bit-packing).  Unused source codes map to -1 in the remap tables.
+        Per-source view of ``merge_subset_flat`` (the compaction backends
+        consume the flat table directly).
         """
-        subset_vals = [o.values[m] for o, m in zip(opds, used)]
-        if sum(v.shape[0] for v in subset_vals) == 0:
-            return OPD(np.asarray([], dtype=opds[0].values.dtype)), [
-                np.full(o.size, -1, np.int32) for o in opds
-            ]
-        new_vals = np.unique(np.concatenate(subset_vals))
-        new = OPD(new_vals)
-        remaps = []
-        for o, m in zip(opds, used):
-            r = np.full(o.size, -1, np.int32)
-            if m.any():
-                r[m] = np.searchsorted(new_vals, o.values[m]).astype(np.int32)
-            remaps.append(r)
+        new, flat, offsets = OPD.merge_subset_flat(opds, used)
+        # copies, not views: callers own their remap arrays (mutating one
+        # must never corrupt the shared flat table or sibling remaps)
+        remaps = [flat[offsets[i]:offsets[i + 1]].copy()
+                  for i in range(len(opds))]
         return new, remaps

@@ -154,7 +154,7 @@ class SCT:
     value_width: int
     disk_bytes: int
     # --- 'opd' ---
-    evs: Optional[np.ndarray] = None     # int32 codes; -1 for tombstones
+    _evs: Optional[np.ndarray] = None    # int32 codes; -1 for tombstones
     packed: Optional[np.ndarray] = None  # uint32 words (bit-packed evs)
     code_bits: int = 0
     opd: Optional[OPD] = None            # memory-resident dictionary
@@ -168,6 +168,25 @@ class SCT:
     vfids: Optional[np.ndarray] = None   # int64  [n] blob file ids (-1 = none)
 
     max_seqno: int = 0   # cached; enables the vectorized shadow-check path
+
+    @property
+    def evs(self) -> Optional[np.ndarray]:
+        """int32 code column [n], -1 at tombstones.
+
+        SCTs written by the 'jax_packed' compaction backend carry only the
+        bit-packed words — the unpacked column is reconstructed here on
+        first access and cached (readers that stay on the packed path,
+        e.g. the 'jax_packed' filter backend, never trigger it).
+        """
+        if self._evs is None and self.packed is not None:
+            evs = bitunpack(self.packed, self.code_bits, self.n)
+            evs[self.tombs] = -1  # tombstones pack as 0; restore sentinel
+            self._evs = evs
+        return self._evs
+
+    @evs.setter
+    def evs(self, value: Optional[np.ndarray]) -> None:
+        self._evs = value
 
     @property
     def n(self) -> int:
@@ -272,11 +291,15 @@ def build_sct(
     # exactly one of the following value sources:
     raw_values: Optional[np.ndarray] = None,            # S<w> [n]
     encoded: Optional[Tuple[np.ndarray, OPD]] = None,   # (evs, opd) pre-merged
+    packed_encoded: Optional[Tuple[np.ndarray, int, OPD]] = None,
     blob_refs: Optional[Tuple[np.ndarray, np.ndarray]] = None,  # (vfids, vptrs)
 ) -> SCT:
-    """Build + "write" one SCT.  For 'opd', pass either raw values (flush
-    path: OPD construction = sort, paper §3) or pre-merged (evs, opd)
-    (compaction path: Algorithm 1 already remapped codes)."""
+    """Build + "write" one SCT.  For 'opd', pass raw values (flush path:
+    OPD construction = sort, paper §3), pre-merged (evs, opd) (compaction
+    path: Algorithm 1 already remapped codes), or — from the 'jax_packed'
+    compaction backend — ``packed_encoded`` = (packed words, pack width,
+    opd), in which case the unpacked code column is never materialized
+    (``SCT.evs`` reconstructs it lazily if a reader needs it)."""
     n = keys.shape[0]
     rec = record_disk_bytes(codec, key_bytes, value_width)
     epb = max(1, int(block_bytes // max(rec, 1)))
@@ -292,13 +315,17 @@ def build_sct(
     meta_overhead = sct.blocks.nbytes
 
     if codec == "opd":
-        if encoded is not None:
-            evs, opd = encoded
+        if packed_encoded is not None:
+            packed, width, opd = packed_encoded
         else:
-            evs, opd = _opd_encode(raw_values, tombs)
-        width = pack_width(opd.code_bits)
-        packed = bitpack(np.clip(evs, 0, None), width)
-        sct.evs, sct.packed, sct.code_bits, sct.opd = evs, packed, width, opd
+            if encoded is not None:
+                evs, opd = encoded
+            else:
+                evs, opd = _opd_encode(raw_values, tombs)
+            width = pack_width(opd.code_bits)
+            packed = bitpack(np.clip(evs, 0, None), width)
+            sct.evs = evs
+        sct.packed, sct.code_bits, sct.opd = packed, width, opd
         disk = n * (key_bytes + SEQNO_BYTES) + packed.nbytes + opd.nbytes + meta_overhead
     elif codec == "plain":
         sct.values = raw_values

@@ -17,6 +17,7 @@ import numpy as np
 
 from repro.kernels import bitpack as _bitpack
 from repro.kernels import bloom_probe as _bloom
+from repro.kernels import merge_remap as _merge_remap
 from repro.kernels import multi_filter as _multi_filter
 from repro.kernels import opd_filter as _opd_filter
 from repro.kernels import packed_filter as _packed_filter
@@ -139,6 +140,87 @@ def unpack_codes(words, width: int, n: int, block_rows: int = 128) -> np.ndarray
     # x3[m, k, l] -> linear code index m*LANES*per + l*per + k
     lin = np.asarray(codes3).transpose(0, 2, 1).reshape(-1)
     return lin[:n]
+
+
+# --------------------------------------------------------------------------- #
+# merge_remap (compaction-time code rewrite)
+# --------------------------------------------------------------------------- #
+def _pad_rows_pow2(x: jax.Array, unit: int, fill) -> jax.Array:
+    """Pad 1D x to a power-of-two count of `unit`-sized rows (>= 1 row).
+
+    Compaction calls these kernels once per output chunk, and chunk and
+    dictionary sizes vary per merge — padding to power-of-two buckets
+    keeps the padded work proportional to the real work (vs a fixed
+    full-grid pad) AND bounds the set of traced shapes to O(log n), so
+    repeated compactions reuse a handful of compiled kernels instead of
+    retracing per distinct (rows, t_rows)."""
+    n = x.shape[0]
+    rows = max(1, -(-n // unit))
+    r = 1
+    while r < rows:
+        r *= 2
+    want = r * unit
+    if want == n:
+        return x
+    return jnp.pad(x, [(0, want - n)], constant_values=fill)
+
+
+def _remap_operands(table, offsets):
+    """Shape the flat remap table + per-source offsets for the kernels:
+    table zero-padded to a power-of-two (t_rows, 128) VMEM block (>= 1
+    row so the dead-entry placeholder gather stays in bounds), offsets
+    as (n_src, 1) SMEM."""
+    n_src = len(offsets) - 1
+    tbl = jnp.asarray(np.asarray(table, np.int32))
+    tbl = _pad_rows_pow2(tbl, LANES, 0).reshape(-1, LANES)
+    offs = jnp.asarray(np.asarray(offsets[:n_src], np.int32).reshape(n_src, 1))
+    return tbl, offs
+
+
+def remap_codes(evs, srcs, table, offsets, block_rows: int = 128) -> np.ndarray:
+    """Flattened <src, ev> -> ev' remap (Algorithm 1 line 9) as one tiled
+    table gather.  evs int32 [n] (-1 = dead), srcs int32 [n],
+    table int32 [sum D_i], offsets [n_src + 1]; returns int32 [n] with
+    dead entries preserved as -1."""
+    evs = jnp.asarray(evs, jnp.int32)
+    n = evs.shape[0]
+    if n == 0:
+        return np.zeros(0, np.int32)
+    tbl, offs = _remap_operands(table, offsets)
+    ev2 = _pad_rows_pow2(evs, LANES, -1).reshape(-1, LANES)
+    src2 = _pad_rows_pow2(jnp.asarray(srcs, jnp.int32),
+                          LANES, 0).reshape(-1, LANES)
+    out = _merge_remap.remap_codes_2d(ev2, src2, tbl, offs,
+                                      block_rows=min(block_rows,
+                                                     ev2.shape[0]),
+                                      interpret=INTERPRET)
+    return np.asarray(out).reshape(-1)[:n]
+
+
+def remap_pack_codes(evs, srcs, table, offsets, width: int,
+                     block_rows: int = 128) -> np.ndarray:
+    """Fused remap + k-bit pack ('jax_packed' compaction backend): returns
+    uint32 words [ceil(n / (32/width))] in the same linear layout as
+    ``core.sct.bitpack`` — word j holds entries j*per .. j*per+per-1, and
+    dead entries pack as 0.  Remapped int32 codes never reach memory."""
+    per = 32 // width
+    evs = jnp.asarray(evs, jnp.int32)
+    n = evs.shape[0]
+    if n == 0:
+        return np.zeros(0, np.uint32)
+    tbl, offs = _remap_operands(table, offsets)
+    group = per * LANES
+    ev_flat = _pad_rows_pow2(evs, group, -1)
+    src_flat = _pad_rows_pow2(jnp.asarray(srcs, jnp.int32), group, 0)
+    m = ev_flat.shape[0] // group
+    # linear entry index m*LANES*per + l*per + k -> x3[m, k, l] (bitpack layout)
+    ev3 = ev_flat.reshape(m, LANES, per).transpose(0, 2, 1)
+    src3 = src_flat.reshape(m, LANES, per).transpose(0, 2, 1)
+    words = _merge_remap.remap_pack_codes_3d(ev3, src3, tbl, offs, width=width,
+                                             block_rows=min(block_rows, m),
+                                             interpret=INTERPRET)
+    n_words = (n + per - 1) // per
+    return np.asarray(words).reshape(-1)[:n_words]
 
 
 # --------------------------------------------------------------------------- #

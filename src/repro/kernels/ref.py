@@ -46,6 +46,34 @@ def unpack_codes(words: jax.Array, width: int) -> jax.Array:
 
 
 # --------------------------------------------------------------------------- #
+# merge_remap: compaction-time <src, ev> -> ev' table gather (Algorithm 1)
+# --------------------------------------------------------------------------- #
+def merge_remap(evs: jax.Array, srcs: jax.Array, table: jax.Array,
+                offsets: jax.Array) -> jax.Array:
+    """out[i] = table[evs[i] + offsets[srcs[i]]] for live entries
+    (evs[i] >= 0); dead entries (tombstones / dropped) stay -1.
+
+    evs, srcs: int32 [n]; table: int32 [sum D_i] — the per-source
+    ``old_code -> new_code`` remap tables concatenated, -1 at unused
+    codes; offsets: int32 [n_src] — base of source i's slice in table.
+    """
+    live = evs >= 0
+    idx = jnp.where(live, evs + offsets[srcs], 0)
+    if table.shape[0] == 0:  # every entry dead: nothing to look up
+        return jnp.full_like(evs, -1)
+    return jnp.where(live, table[idx], -1)
+
+
+def merge_remap_pack(evs: jax.Array, srcs: jax.Array, table: jax.Array,
+                     offsets: jax.Array, width: int) -> jax.Array:
+    """Fused oracle for the 'jax_packed' backend: remap then k-bit pack
+    (dead entries pack as 0, matching ``core.sct.bitpack(clip(evs, 0))``).
+    n must be divisible by 32/width (callers pad with dead entries)."""
+    new = merge_remap(evs, srcs, table, offsets)
+    return pack_codes(jnp.clip(new, 0, None), width)
+
+
+# --------------------------------------------------------------------------- #
 # packed_filter: range predicate evaluated DIRECTLY on packed words
 # --------------------------------------------------------------------------- #
 def range_filter_packed(words: jax.Array, width: int, lo, hi) -> jax.Array:

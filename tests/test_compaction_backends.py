@@ -1,0 +1,256 @@
+"""Differential tests for the pluggable compaction backends.
+
+Contract: 'numpy', 'jax', and 'jax_packed' produce *bit-identical*
+output SCTs — keys, seqnos, tombstones, packed code words, rebuilt
+dictionaries, disk accounting, and dict_compares — for every codec,
+on randomized merges and on the degenerate shapes (empty input file,
+all-tombstone subsequence, single distinct value).  The kernels are
+additionally pinned to their jnp oracles in ``kernels/ref.py``.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import LSMConfig, LSMTree, Predicate
+from repro.core.compaction import merge_scts
+from repro.core.sct import BlobManager, bitpack, build_sct
+from repro.core.stats import StageStats
+from repro.storage.io import FileStore
+
+VW = 24
+KB = 16
+BACKENDS = ["numpy", "jax", "jax_packed"]
+CODECS = ["opd", "plain", "heavy", "blob"]
+
+
+# --------------------------------------------------------------------------- #
+# harness: deterministic input SCTs + single merge per backend
+# --------------------------------------------------------------------------- #
+def _vocab(rng, ndv):
+    ids = np.sort(rng.choice(100_000, size=ndv, replace=False))
+    return np.asarray([b"val_%05d_%c" % (i, 97 + i % 11) for i in ids],
+                      dtype=f"S{VW}")
+
+
+def _build_inputs(codec, seed, n_files=3, n_per=350, ndv=40, tomb_frac=0.15,
+                  key_space=600, empty_file=False, all_tombs=False):
+    """Overlapping input SCTs with globally increasing seqnos (later files
+    are newer).  Same seed => byte-identical inputs across calls."""
+    rng = np.random.default_rng(seed)
+    store, stats = FileStore(), StageStats()
+    blob_mgr = BlobManager(store, VW) if codec == "blob" else None
+    vocab = _vocab(rng, ndv)
+    kwargs = dict(level=0, codec=codec, key_bytes=KB, value_width=VW,
+                  block_bytes=512, bloom_bits_per_key=8, store=store,
+                  blob_mgr=blob_mgr)
+    inputs, seq = [], 1
+    for f in range(n_files):
+        n = 0 if (empty_file and f == 0) else n_per
+        keys = np.sort(rng.choice(key_space, size=n, replace=False)
+                       ).astype(np.uint64)
+        seqnos = np.arange(seq, seq + n, dtype=np.uint64)
+        seq += n
+        tombs = (np.ones(n, np.bool_) if all_tombs
+                 else rng.random(n) < tomb_frac)
+        vals = vocab[rng.integers(0, ndv, n)]
+        inputs.append(build_sct(keys=keys, seqnos=seqnos, tombs=tombs,
+                                raw_values=vals, **kwargs))
+    return inputs, store, stats, blob_mgr
+
+
+def _merge(codec, backend, seed, *, is_bottom=False, file_entries=256, **kw):
+    inputs, store, stats, blob_mgr = _build_inputs(codec, seed, **kw)
+    return merge_scts(inputs, out_level=1, is_bottom=is_bottom,
+                      file_entries=file_entries, store=store, stats=stats,
+                      blob_mgr=blob_mgr, block_bytes=512,
+                      bloom_bits_per_key=8, backend=backend)
+
+
+def _assert_results_identical(a, b, codec):
+    assert a.n_in == b.n_in and a.n_out == b.n_out
+    assert a.n_dropped == b.n_dropped
+    assert a.dict_compares == b.dict_compares
+    assert len(a.outputs) == len(b.outputs)
+    for x, y in zip(a.outputs, b.outputs):
+        assert np.array_equal(x.keys, y.keys)
+        assert np.array_equal(x.seqnos, y.seqnos)
+        assert np.array_equal(x.tombs, y.tombs)
+        assert x.disk_bytes == y.disk_bytes
+        if codec == "opd":
+            assert x.code_bits == y.code_bits
+            assert np.array_equal(x.packed, y.packed)
+            assert np.array_equal(x.opd.values, y.opd.values)
+            # jax_packed materializes evs lazily — this also pins the
+            # unpack-on-read path to the eager column
+            assert np.array_equal(x.evs, y.evs)
+        elif codec == "plain":
+            assert np.array_equal(x.values, y.values)
+        elif codec == "heavy":
+            assert x.zblocks == y.zblocks
+            assert x.zblock_entries == y.zblock_entries
+        elif codec == "blob":
+            assert np.array_equal(x.vfids, y.vfids)
+            assert np.array_equal(x.vptrs, y.vptrs)
+
+
+# --------------------------------------------------------------------------- #
+# randomized merges, every codec x every backend
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("codec", CODECS)
+def test_differential_randomized(codec):
+    for seed in (0, 1):
+        base = _merge(codec, "numpy", seed)
+        for backend in BACKENDS[1:]:
+            other = _merge(codec, backend, seed)
+            _assert_results_identical(base, other, codec)
+
+
+def test_differential_multi_file_outputs():
+    """file_entries smaller than n_out => several output SCTs, each with
+    its own rebuilt dictionary (Algorithm 1 is per-output-subsequence)."""
+    base = _merge("opd", "numpy", 7, file_entries=96)
+    assert len(base.outputs) > 3
+    for backend in BACKENDS[1:]:
+        _assert_results_identical(base, _merge("opd", backend, 7,
+                                               file_entries=96), "opd")
+
+
+# --------------------------------------------------------------------------- #
+# degenerate shapes
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("backend", BACKENDS[1:])
+def test_edge_empty_input_file(backend):
+    base = _merge("opd", "numpy", 3, empty_file=True)
+    _assert_results_identical(base, _merge("opd", backend, 3,
+                                           empty_file=True), "opd")
+
+
+@pytest.mark.parametrize("backend", BACKENDS[1:])
+def test_edge_all_tombstones(backend):
+    """Non-bottom merge of pure tombstones: outputs carry the tombs, the
+    rebuilt dictionaries are empty, every packed word is 0."""
+    base = _merge("opd", "numpy", 4, all_tombs=True, n_per=120)
+    assert base.n_out > 0
+    for out in base.outputs:
+        assert out.opd.size == 0
+        assert np.all(out.tombs)
+        assert np.all(out.evs == -1)
+        assert not np.any(out.packed)
+    _assert_results_identical(base, _merge("opd", backend, 4, all_tombs=True,
+                                           n_per=120), "opd")
+
+
+@pytest.mark.parametrize("backend", BACKENDS[1:])
+def test_edge_all_tombstones_bottom_drops_everything(backend):
+    base = _merge("opd", "numpy", 5, all_tombs=True, n_per=80, is_bottom=True)
+    assert base.n_out == 0 and base.outputs == []
+    _assert_results_identical(
+        base, _merge("opd", backend, 5, all_tombs=True, n_per=80,
+                     is_bottom=True), "opd")
+
+
+@pytest.mark.parametrize("backend", BACKENDS[1:])
+def test_edge_single_distinct_value(backend):
+    """ndv=1 => 1-entry dictionaries, width-1 packing (32 codes/word)."""
+    base = _merge("opd", "numpy", 6, ndv=1)
+    assert all(out.opd.size == 1 and out.code_bits == 1
+               for out in base.outputs)
+    _assert_results_identical(base, _merge("opd", backend, 6, ndv=1), "opd")
+
+
+# --------------------------------------------------------------------------- #
+# kernel <-> oracle parity (shape/width sweep)
+# --------------------------------------------------------------------------- #
+def test_remap_kernels_match_oracle():
+    import jax.numpy as jnp
+
+    from repro.kernels import ops, ref
+
+    rng = np.random.default_rng(11)
+    for n, n_src, dsize in ((0, 1, 4), (5, 1, 1), (700, 3, 30), (4097, 5, 61)):
+        offsets = np.arange(n_src + 1, dtype=np.int64) * dsize
+        table = np.full(n_src * dsize, -1, np.int32)
+        used = rng.random(n_src * dsize) < 0.8
+        table[used] = (np.cumsum(used)[used] - 1).astype(np.int32)
+        srcs = rng.integers(0, n_src, n).astype(np.int32)
+        evs = np.where(rng.random(n) < 0.2, -1,
+                       rng.integers(0, dsize, n)).astype(np.int32)
+        want = np.asarray(ref.merge_remap(
+            jnp.asarray(evs), jnp.asarray(srcs), jnp.asarray(table),
+            jnp.asarray(offsets[:n_src], np.int32)))
+        got = ops.remap_codes(evs, srcs, table, offsets)
+        assert np.array_equal(got, want), (n, n_src)
+        for width in (1, 4, 16):
+            if used.any() and int(table.max()) >= (1 << width):
+                continue
+            words = ops.remap_pack_codes(evs, srcs, table, offsets, width)
+            assert np.array_equal(words, bitpack(np.clip(want, 0, None),
+                                                 width)), (n, width)
+
+
+def test_remap_pack_kernel_every_width():
+    """Every pack width in {1,2,4,8,16,32} with multi-source, multi-code
+    data: the new-code range is capped at 2**width so no width is ever
+    skipped (the shape sweep above drops overflowing widths silently)."""
+    from repro.kernels import ops
+
+    rng = np.random.default_rng(12)
+    n_src, dsize, n = 3, 40, 700
+    offsets = np.arange(n_src + 1, dtype=np.int64) * dsize
+    total = n_src * dsize
+    for width in (1, 2, 4, 8, 16, 32):
+        k = min(1 << width, total)
+        pos = np.sort(rng.choice(total, size=k, replace=False))
+        table = np.full(total, -1, np.int32)
+        table[pos] = np.arange(k, dtype=np.int32)  # new codes < 2**width
+        srcs = rng.integers(0, n_src, n).astype(np.int32)
+        evs = np.where(rng.random(n) < 0.2, -1,
+                       rng.integers(0, dsize, n)).astype(np.int32)
+        live = evs >= 0
+        want = np.full(n, -1, np.int32)
+        want[live] = table[evs[live] + offsets[srcs[live]]]
+        assert np.array_equal(ops.remap_codes(evs, srcs, table, offsets),
+                              want), width
+        words = ops.remap_pack_codes(evs, srcs, table, offsets, width)
+        assert np.array_equal(words, bitpack(np.clip(want, 0, None),
+                                             width)), width
+
+
+# --------------------------------------------------------------------------- #
+# full-tree differential (acceptance criterion): identical final state
+# --------------------------------------------------------------------------- #
+def test_tree_level_differential():
+    def build(backend):
+        t = LSMTree(LSMConfig(codec="opd", value_width=VW,
+                              file_bytes=16 * 1024, l0_limit=2, size_ratio=3,
+                              max_levels=5, compaction_backend=backend))
+        rng = np.random.default_rng(42)
+        for _ in range(4000):
+            k = int(rng.integers(0, 1800))
+            if rng.random() < 0.12:
+                t.delete(k)
+            else:
+                t.put(k, b"pfx_%03d_x" % int(rng.integers(0, 120)))
+        return t
+
+    base = build("numpy")
+    assert base.n_compactions > 0 and base.dict_compares > 0
+    for backend in BACKENDS[1:]:
+        t = build(backend)
+        assert t.dict_compares == base.dict_compares
+        for lvl in range(base.cfg.max_levels):
+            assert len(base.levels[lvl]) == len(t.levels[lvl]), (backend, lvl)
+            for x, y in zip(base.levels[lvl], t.levels[lvl]):
+                assert np.array_equal(x.keys, y.keys)
+                assert np.array_equal(x.seqnos, y.seqnos)
+                assert np.array_equal(x.tombs, y.tombs)
+                assert x.code_bits == y.code_bits
+                assert np.array_equal(x.packed, y.packed)
+                assert np.array_equal(x.opd.values, y.opd.values)
+                assert np.array_equal(x.evs, y.evs)
+                assert x.disk_bytes == y.disk_bytes
+        for pfx in (b"pfx_00", b"pfx_11"):
+            ra = base.filter(Predicate("prefix", pfx))
+            rt = t.filter(Predicate("prefix", pfx))
+            assert np.array_equal(ra.keys, rt.keys)
+            assert np.array_equal(ra.values, rt.values)

@@ -86,6 +86,29 @@ def test_filter_with_shadowing(codec):
     assert got == exp, (codec, len(got), len(exp))
 
 
+def test_all_runs_l0_order_newest_first():
+    """Regression: ``all_runs(newest_first)`` must honor its parameter.
+    L0 read order after multiple flushes is newest-first (shadowing
+    depends on it); ``newest_first=False`` yields oldest-first."""
+    t = LSMTree(LSMConfig(codec="opd", value_width=VW, file_bytes=64 * 1024,
+                          l0_limit=10, size_ratio=3, max_levels=5))
+    for rnd in range(4):
+        for k in range(40):
+            t.put(k, val(rnd))
+        t.flush()
+    n_l0 = len(t.levels[0])
+    assert n_l0 >= 4 and t.n_compactions == 0
+    runs = t.all_runs()
+    l0_seqs = [s.max_seqno for s in runs[:n_l0]]
+    assert l0_seqs == sorted(l0_seqs, reverse=True)  # newest -> oldest
+    rev = t.all_runs(newest_first=False)
+    assert [s.file_id for s in rev[:n_l0]] == \
+        [s.file_id for s in reversed(runs[:n_l0])]
+    assert [s.file_id for s in rev[n_l0:]] == [s.file_id for s in runs[n_l0:]]
+    # the newest version must win on read (first-match-wins over L0)
+    assert t.get(0).rstrip(b"\x00") == val(3)
+
+
 def test_mvcc_snapshot_isolation():
     t = LSMTree(small_cfg("opd"))
     for i in range(3000):

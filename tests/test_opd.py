@@ -83,6 +83,64 @@ def test_merge_remaps_preserve_values_and_order(dict_sets):
         [o.values for o in opds])))
 
 
+def _check_merge_subset(dict_specs):
+    """dict_specs: per source dict, a list of (value_id, used) pairs.
+    Verifies the full Algorithm-1 merge_subset contract."""
+    opds, used = [], []
+    for spec in dict_specs:
+        d = {}
+        for v, u in spec:
+            d[v] = d.get(v, False) or u  # any duplicate marked used wins
+        vals = sorted(d)
+        opds.append(OPD(mk([b"w%03d" % v for v in vals])))
+        used.append(np.array([d[v] for v in vals], np.bool_))
+    merged, remaps = OPD.merge_subset(opds, used)
+    # merged dictionary is sorted and duplicate-free
+    assert np.all(merged.values[:-1] < merged.values[1:])
+    # ...and covers exactly the union of used entries
+    union = sorted({bytes(v) for o, m in zip(opds, used) for v in o.values[m]})
+    assert [bytes(v) for v in merged.values] == union
+    for o, m, r in zip(opds, used, remaps):
+        assert r.shape == (o.size,) and r.dtype == np.int32
+        # unused codes map to -1; used codes land in [0, D')
+        assert np.all(r[~m] == -1)
+        if m.any():
+            assert r[m].min() >= 0 and r[m].max() < merged.size
+            # remap preserves value equality...
+            assert np.array_equal(merged.values[r[m]], o.values[m])
+            # ...and relative order (strictly, source dicts are unique)
+            assert np.all(np.diff(r[m]) > 0)
+    # flat variant is the same merge in kernel-operand layout
+    new2, flat, offsets = OPD.merge_subset_flat(opds, used)
+    assert np.array_equal(new2.values, merged.values)
+    assert offsets[0] == 0 and offsets[-1] == sum(o.size for o in opds)
+    for i, r in enumerate(remaps):
+        assert np.array_equal(flat[offsets[i]:offsets[i + 1]], r)
+
+
+@given(st.lists(st.lists(st.tuples(st.integers(0, 150), st.booleans()),
+                         min_size=1, max_size=40),
+                min_size=1, max_size=4))
+@settings(max_examples=50, deadline=None)
+def test_property_merge_subset(dict_specs):
+    _check_merge_subset(dict_specs)
+
+
+def test_merge_subset_randomized_seeded():
+    """Seeded sweep of the same contract (runs even without hypothesis)."""
+    rng = np.random.default_rng(9)
+    for _ in range(25):
+        n_src = int(rng.integers(1, 5))
+        specs = []
+        for _ in range(n_src):
+            n = int(rng.integers(1, 40))
+            specs.append([(int(rng.integers(0, 150)), bool(rng.random() < .6))
+                          for _ in range(n)])
+        _check_merge_subset(specs)
+    # degenerate: nothing used anywhere => empty dict, all -1 remaps
+    _check_merge_subset([[(3, False)], [(7, False), (9, False)]])
+
+
 def test_merge_subset_dense():
     o1, _ = OPD.build(mk([b"a", b"b", b"c", b"d"]))
     o2, _ = OPD.build(mk([b"b", b"x"]))
