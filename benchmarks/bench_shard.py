@@ -1,0 +1,145 @@
+"""Shard-scaling sweep: ingest + filter throughput vs shard count & skew.
+
+For each (shard count, skew) cell the SAME workload is ingested into a
+``ShardedLSM`` (shard-parallel ``put_batch`` on the executor's thread
+pool, flushes/compactions running inside the workers) and then drained
+through ``N_FILTERS`` scatter-gather filter batches.  The headline
+number is combined ingest+filter wall-clock throughput relative to the
+1-shard baseline of the same workload (``speedup_vs_1shard``); per-cell
+``io_report``/``shape_report`` aggregates (splits, boundaries, modeled
+I/O) land in the derived columns.  Methodology + recorded numbers:
+docs/EXPERIMENTS.md §bench-shard.
+
+``--smoke`` additionally asserts the n_shards=1 differential contract
+in-process (merged filter results bit-identical to a plain ``LSMTree``)
+so the nightly job fails loudly if sharding ever drifts — the same role
+the ``--backend`` sweep plays for bench_compaction.
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+from typing import List, Optional
+
+import numpy as np
+
+from benchmarks._harness import BenchRow, gen_keys, gen_values
+from repro.core import LSMConfig, LSMTree, Predicate
+from repro.shard import RebalanceConfig, ShardedLSM
+from repro.storage.devices import DEVICES
+
+SHARD_COUNTS = [1, 2, 4]
+SKEWS = [0.0, 1.1]  # uniform | zipf-hot keys
+N_FILTERS = 30
+VALUE_WIDTH = 64
+KEY_SPACE_FACTOR = 4
+
+
+def _preds(k: int) -> List[Predicate]:
+    return [Predicate("prefix", b"cat_%03d" % (i % 100)) for i in range(k)]
+
+
+def _skewed_keys(n: int, key_space: int, zipf_s: float, seed: int
+                 ) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    if zipf_s <= 0.01:
+        return rng.integers(0, key_space, n, dtype=np.uint64)
+    # hot-range skew: most writes land in the lowest-keyed shard, which
+    # is exactly the workload the hot-shard splitter exists for
+    hot = rng.integers(0, max(1, key_space // 16), int(n * 0.8),
+                       dtype=np.uint64)
+    cold = rng.integers(0, key_space, n - hot.shape[0], dtype=np.uint64)
+    keys = np.concatenate([hot, cold])
+    rng.shuffle(keys)
+    return keys
+
+
+def run(n: int = 120_000, shard_counts: Optional[List[int]] = None,
+        skews: Optional[List[float]] = None, batch: int = 16,
+        rebalance: bool = True, device: str = "nvme_ssd") -> List[BenchRow]:
+    rows = []
+    key_space = KEY_SPACE_FACTOR * n
+    cfg = LSMConfig(codec="opd", value_width=VALUE_WIDTH,
+                    file_bytes=512 * 1024, l0_limit=4, size_ratio=8)
+    preds = _preds(batch)
+    for zipf_s in (skews or SKEWS):
+        keys = _skewed_keys(n, key_space, zipf_s, seed=3)
+        vals = gen_values(n, VALUE_WIDTH, ndv_ratio=0.01, zipf_s=0.0, seed=4)
+        base_total = None
+        for n_shards in (shard_counts or SHARD_COUNTS):
+            # the 1-shard cell is the single-tree baseline (an LSMTree has
+            # no splitter); rebalancing belongs to the sharded engine
+            reb = (RebalanceConfig(
+                split_threshold_bytes=max(1, n // 4)
+                * (cfg.key_bytes + 8 + VALUE_WIDTH),
+                skew_factor=1.5, max_shards=4 * n_shards)
+                if rebalance and zipf_s > 0.01 and n_shards > 1 else None)
+            with ShardedLSM(cfg, n_shards=n_shards, key_max=key_space,
+                            rebalance=reb) as tree:
+                t0 = time.perf_counter()
+                for lo in range(0, n, 8192):
+                    tree.put_batch(keys[lo:lo + 8192], vals[lo:lo + 8192])
+                # maintenance belongs to the write path: scans are served
+                # from compacted shards (shard-parallel on the executor)
+                tree.compact_all()
+                ingest_s = time.perf_counter() - t0
+                t0 = time.perf_counter()
+                for _ in range(N_FILTERS):
+                    res = tree.filter_many(preds)
+                filter_s = time.perf_counter() - t0
+                total = ingest_s + filter_s
+                if n_shards == 1:
+                    base_total = total
+                rep = tree.io_report(DEVICES[device])
+                shape = tree.shape_report()
+                rows.append(BenchRow(
+                    f"shard/zipf{zipf_s:g}/s{n_shards}",
+                    total * 1e6,
+                    {"ingest_s": ingest_s,
+                     "filter_s": filter_s,
+                     "ingest_mops": n / 1e6 / ingest_s,
+                     "filters_per_s": N_FILTERS * batch / filter_s,
+                     "speedup_vs_1shard":
+                         base_total / total if base_total else float("nan"),
+                     "matches": sum(r.keys.shape[0] for r in res),
+                     "n_shards_final": shape["n_shards"],
+                     "n_splits": shape["n_splits"],
+                     "n_compactions": shape["n_compactions"],
+                     "write_stalls": shape["write_stalls"],
+                     "disk_mb": shape["disk_bytes"] / 2**20,
+                     "read_mb": rep["read_bytes"] / 2**20,
+                     "write_mb": rep["write_bytes"] / 2**20,
+                     "modeled_io_s": rep["modeled_read_s"]
+                     + rep["modeled_write_s"]}))
+    return rows
+
+
+def smoke(n: int = 6_000) -> None:
+    """Nightly guard: ShardedLSM(n_shards=1) == LSMTree, bit for bit."""
+    key_space = KEY_SPACE_FACTOR * n
+    cfg = LSMConfig(codec="opd", value_width=VALUE_WIDTH,
+                    file_bytes=64 * 1024, l0_limit=2, size_ratio=4)
+    keys = gen_keys(n, key_space, seed=5)
+    vals = gen_values(n, VALUE_WIDTH, seed=6)
+    plain = LSMTree(cfg)
+    plain.put_batch(keys, vals)
+    with ShardedLSM(cfg, n_shards=1, key_max=key_space) as sharded:
+        sharded.put_batch(keys, vals)
+        for pred in _preds(8):
+            a, b = plain.filter(pred), sharded.filter(pred)
+            assert np.array_equal(a.keys, b.keys), "smoke: key mismatch"
+            assert np.array_equal(a.values, b.values), "smoke: value mismatch"
+            assert (a.n_scanned, a.n_matched_raw) == (b.n_scanned,
+                                                      b.n_matched_raw)
+    print("bench_shard smoke: n_shards=1 differential OK")
+
+
+if __name__ == "__main__":
+    if "--smoke" in sys.argv:
+        smoke()
+    n = 120_000
+    if "--n" in sys.argv:
+        n = int(sys.argv[sys.argv.index("--n") + 1])
+    for row in run(n=n):
+        print(row.csv())

@@ -72,7 +72,13 @@ def merge_scts(
     block_bytes: int = 4096,
     bloom_bits_per_key: int = 10,
     backend: str = "numpy",  # 'numpy' | 'jax' | 'jax_packed' ('opd' encode)
+    key_range: Optional[Tuple[int, int]] = None,  # half-open [lo, hi)
 ) -> CompactionResult:
+    """``key_range`` restricts the output to keys in ``[lo, hi)`` — the
+    shard-split path rebuilds each half of a tree with one such merge
+    over ALL of the tree's runs.  Entries outside the range are simply
+    not ours (they belong to the sibling merge), so they are neither
+    counted as dropped nor marked as blob garbage."""
     codec = inputs[0].codec
     n_in = sum(s.n for s in inputs)
 
@@ -107,6 +113,10 @@ def merge_scts(
         keep[1:] = keys[1:] != keys[:-1]
         if is_bottom:
             keep &= ~tombs  # physical delete at the deepest level
+        if key_range is not None:
+            in_range = _range_mask(keys, key_range)
+            n_in = int(in_range.sum())  # only our half's entries count
+            keep &= in_range
         keys, seqnos, tombs = keys[keep], seqnos[keep], tombs[keep]
         srcs, idxs = srcs[keep], idxs[keep]
     n_out = int(keys.shape[0])
@@ -127,7 +137,7 @@ def merge_scts(
     )
 
     if codec == "blob" and blob_mgr is not None:
-        _mark_blob_garbage(inputs, srcs, idxs, tombs, blob_mgr, n_in)
+        _mark_blob_garbage(inputs, srcs, idxs, blob_mgr, key_range)
 
     # hoisted once per merge (not per output chunk): old-code columns of
     # the inputs, unpacked transiently for packed-only SCTs
@@ -237,6 +247,16 @@ def _source_codes(s: SCT, backend: str) -> np.ndarray:
     return np.where(s.tombs, np.int32(-1), codes)
 
 
+def _range_mask(keys: np.ndarray, key_range: Tuple[int, int]) -> np.ndarray:
+    """bool mask for keys in half-open [lo, hi); hi >= 2**64 (the top
+    shard's unbounded range) cannot be a uint64 and means no upper cap."""
+    lo, hi = key_range
+    mask = keys >= np.uint64(lo)
+    if hi < 2 ** 64:
+        mask &= keys < np.uint64(hi)
+    return mask
+
+
 def _gather_raw(raw_cols, c_src, c_idx, width) -> np.ndarray:
     out = np.zeros(c_src.shape[0], f"S{width}")
     for i, col in enumerate(raw_cols):
@@ -264,9 +284,13 @@ def _gather_i64(cols, c_src, c_idx) -> np.ndarray:
     return out
 
 
-def _mark_blob_garbage(inputs, srcs, idxs, tombs, blob_mgr: BlobManager, n_in: int):
-    """Entries dropped by the merge leave garbage in their blob files."""
-    kept = np.zeros(n_in, np.bool_)
+def _mark_blob_garbage(inputs, srcs, idxs, blob_mgr: BlobManager,
+                       key_range=None):
+    """Entries dropped by the merge leave garbage in their blob files.
+    Under a ``key_range`` restriction only in-range drops are garbage —
+    out-of-range entries stay live in the sibling half's output."""
+    total = sum(s.n for s in inputs)
+    kept = np.zeros(total, np.bool_)
     starts = np.zeros(len(inputs) + 1, np.int64)
     for i, s in enumerate(inputs):
         starts[i + 1] = starts[i] + s.n
@@ -274,6 +298,8 @@ def _mark_blob_garbage(inputs, srcs, idxs, tombs, blob_mgr: BlobManager, n_in: i
     for i, s in enumerate(inputs):
         k = kept[starts[i] : starts[i + 1]]
         dead = (~k) & (s.vfids >= 0)
+        if key_range is not None:
+            dead &= _range_mask(s.keys, key_range)
         if dead.any():
             for fid in np.unique(s.vfids[dead]):
                 blob_mgr.mark_dead(int(fid), int((s.vfids[dead] == fid).sum()))

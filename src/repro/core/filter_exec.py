@@ -177,10 +177,15 @@ def evaluate_filter_many(
     # ---- stage: merge (discard stale versions, per predicate) ------------ #
     results = []
     with stats.time("merge"):
+        # memtable shadow state is computed ONCE per batch (sorted key ->
+        # newest visible seqno, tombstones included); the per-predicate
+        # shadow check below is then one searchsorted, not a Python probe
+        # per candidate.
+        mem_newest = _memtable_newest(memtable, snap)
         for q in range(n_preds):
             results.append(_merge_candidates(
                 cand_keys[q], cand_seqs[q], cand_vals[q],
-                live_runs, memtable, snap, n_scanned))
+                live_runs, mem_newest, snap, n_scanned))
     return results
 
 
@@ -189,7 +194,7 @@ def _merge_candidates(
     cand_seqs: List[np.ndarray],
     cand_vals: List[np.ndarray],
     live_runs: List[SCT],
-    memtable: Optional[MemTable],
+    mem_newest: Optional[Tuple[np.ndarray, np.ndarray]],
     snap,
     n_scanned: int,
 ) -> FilterResult:
@@ -209,7 +214,7 @@ def _merge_candidates(
     # shadow check: a candidate only survives if it is the *globally*
     # newest visible version of its key (a newer non-matching version
     # or tombstone shadows it).
-    newest = _global_newest(keys, live_runs, memtable, snap)
+    newest = _global_newest(keys, live_runs, mem_newest, snap)
     ok = seqs == newest
     keys, vals = keys[ok], vals[ok]
     return FilterResult(keys, vals, n_scanned, n_raw)
@@ -285,8 +290,34 @@ def _memtable_visible(memtable: MemTable, snap) -> Tuple:
             np.asarray(vals, f"S{w}"))
 
 
+def _memtable_newest(
+    memtable: Optional[MemTable], snap
+) -> Optional[Tuple[np.ndarray, np.ndarray]]:
+    """Newest visible seqno per memtable key, *including tombstones* (a
+    newer tombstone shadows older candidates), as key-sorted arrays so
+    the shadow check is one ``searchsorted`` per predicate instead of a
+    per-candidate chain probe."""
+    if memtable is None or not memtable.n_versions:
+        return None
+    max_seq = None if snap is None else int(snap)
+    keys, seqs = [], []
+    for key in memtable._chains:
+        got = memtable.get(key, max_seq)
+        if got is None:
+            continue
+        keys.append(key)
+        seqs.append(got[0])
+    if not keys:
+        return None
+    mk = np.asarray(keys, np.uint64)
+    ms = np.asarray(seqs, np.uint64)
+    order = np.argsort(mk)
+    return mk[order], ms[order]
+
+
 def _global_newest(
-    cand_keys: np.ndarray, runs: List[SCT], memtable: Optional[MemTable], snap
+    cand_keys: np.ndarray, runs: List[SCT],
+    mem_newest: Optional[Tuple[np.ndarray, np.ndarray]], snap
 ) -> np.ndarray:
     """Newest visible seqno per candidate key across all runs + memtable.
 
@@ -311,10 +342,9 @@ def _global_newest(
                 if p < s.n and s.keys[p] == cand_keys[j]:
                     seq[j] = s.seqnos[p]
         newest = np.maximum(newest, seq)
-    if memtable is not None:
-        max_seq = None if snap is None else int(snap)
-        for j, k in enumerate(cand_keys):
-            got = memtable.get(int(k), max_seq)
-            if got is not None:
-                newest[j] = max(newest[j], np.uint64(got[0]))
+    if mem_newest is not None:
+        mk, ms = mem_newest
+        pos = np.minimum(np.searchsorted(mk, cand_keys), mk.shape[0] - 1)
+        hit = mk[pos] == cand_keys
+        newest = np.maximum(newest, np.where(hit, ms[pos], 0))
     return newest

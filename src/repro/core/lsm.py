@@ -64,14 +64,23 @@ class Snapshot:
 
 
 class LSMTree:
-    def __init__(self, cfg: LSMConfig, spill_dir: Optional[str] = None):
+    def __init__(self, cfg: LSMConfig, spill_dir: Optional[str] = None,
+                 store: Optional[FileStore] = None,
+                 blob_mgr: Optional[BlobManager] = None):
+        """``store``/``blob_mgr`` injection lets several trees share one
+        backing store (the sharded engine: N shard trees over one disk,
+        so split-rebuilt shards keep addressing existing blob files and
+        I/O accounting stays in one place).  Default: private store."""
         self.cfg = cfg
-        self.store = FileStore(spill_dir)
-        self.blob_mgr = (
-            BlobManager(self.store, cfg.value_width, cfg.blob_compress,
-                        cfg.blob_gc_threshold)
-            if cfg.codec == "blob" else None
-        )
+        self.store = store if store is not None else FileStore(spill_dir)
+        if blob_mgr is not None:
+            self.blob_mgr: Optional[BlobManager] = blob_mgr
+        else:
+            self.blob_mgr = (
+                BlobManager(self.store, cfg.value_width, cfg.blob_compress,
+                            cfg.blob_gc_threshold)
+                if cfg.codec == "blob" else None
+            )
         self.memtable = MemTable(cfg.value_width, cfg.key_bytes)
         self.levels: List[List[SCT]] = [[] for _ in range(cfg.max_levels)]
         self._seqno = 0
@@ -88,6 +97,7 @@ class LSMTree:
         self.compaction_in_bytes = 0
         self.compaction_out_bytes = 0
         self.dict_compares = 0  # cumulative D_i terms across compactions
+        self.ingest_bytes = 0   # logical bytes written (rebalance signal)
         # weakrefs to handed-out snapshots: blob GC must not delete value
         # logs a live snapshot can still address (see _gc_blobs)
         self._snapshots: List["weakref.ref[Snapshot]"] = []
@@ -121,7 +131,7 @@ class LSMTree:
         total = sum(s.disk_bytes for lvl in self.levels for s in lvl)
         if self.blob_mgr is not None:
             total += sum(self.store.size_of(f) for f in self.blob_mgr.live
-                         if f in self.store._sizes)
+                         if self.store.contains(f))
         return total
 
     def all_runs(self, newest_first: bool = True) -> List[SCT]:
@@ -140,12 +150,14 @@ class LSMTree:
     # ------------------------------------------------------------------ #
     def put(self, key: int, value: bytes) -> None:
         self._seqno += 1
+        self.ingest_bytes += self.cfg.key_bytes + 8 + self.cfg.value_width
         self.memtable.put(key, value, self._seqno)
         self._maybe_flush()
 
     def put_batch(self, keys: np.ndarray, values: np.ndarray) -> None:
         """Bulk insertion path for benchmarks (amortizes Python overhead)."""
-        vw = self.cfg.value_width
+        self.ingest_bytes += len(keys) * (self.cfg.key_bytes + 8
+                                          + self.cfg.value_width)
         for k, v in zip(keys.tolist(), values):
             self._seqno += 1
             self.memtable.put(int(k), bytes(v), self._seqno)
@@ -154,6 +166,7 @@ class LSMTree:
 
     def delete(self, key: int) -> None:
         self._seqno += 1
+        self.ingest_bytes += self.cfg.key_bytes + 8
         self.memtable.delete(key, self._seqno)
         self._maybe_flush()
 
@@ -192,6 +205,15 @@ class LSMTree:
             self._compact_l0()
             self._cascade()
             self.stall_seconds += time.perf_counter() - t0
+
+    def compact(self) -> None:
+        """Force a full maintenance pass: flush the memtable, fold L0
+        into L1, and cascade any over-capacity levels.  The shard
+        executor drives this across shards on its thread pool."""
+        self.flush()
+        if self.levels[0]:
+            self._compact_l0()
+        self._cascade()
 
     # ------------------------------------------------------------------ #
     # compaction scheduling (leveling, paper Figure 2)
@@ -298,7 +320,7 @@ class LSMTree:
                 self.blob_mgr.live.pop(fid, None)
                 self.blob_mgr.total.pop(fid, None)
                 continue
-            _, payload, values = self.store._objects[fid]
+            _, payload, values = self.store.payload(fid)
             parts = [values[s.vptrs[sel].astype(np.int64)] for s, sel in refs]
             new_vals = np.concatenate(parts)
             new_fid, _ = self.blob_mgr.append(new_vals)

@@ -112,7 +112,7 @@ class BlobManager:
     def read_values(self, fid: int, ptrs: np.ndarray, random_io: bool = True
                     ) -> np.ndarray:
         """Random value reads: 1 I/O per value (BlobDB's scan weakness)."""
-        kind, payload, values = self.store._objects[fid]
+        kind, payload, values = self.store.payload(fid)
         n = ptrs.shape[0]
         if self.compress:
             # dictionary/zstd-style blob compression: decompress file once

@@ -13,7 +13,7 @@ from __future__ import annotations
 import contextlib
 import time
 from collections import defaultdict
-from typing import Dict, Iterator
+from typing import Dict, Iterable, Iterator
 
 COMPACTION_STAGES = (
     "retrieval", "read", "decode", "merge", "filter", "encode", "write",
@@ -42,11 +42,18 @@ class StageStats:
         return sum(self.seconds.values())
 
     def merged(self, other: "StageStats") -> "StageStats":
+        return StageStats.merge_all((self, other))
+
+    @staticmethod
+    def merge_all(many: Iterable["StageStats"]) -> "StageStats":
+        """Aggregate per-stage seconds/counts across components — the
+        scatter-gather report path (e.g. one row per ShardedLSM stage
+        summed over every shard tree)."""
         out = StageStats()
-        for src in (self, other):
-            for k, v in src.seconds.items():
+        for st in many:
+            for k, v in st.seconds.items():
                 out.seconds[k] += v
-            for k, v in src.counts.items():
+            for k, v in st.counts.items():
                 out.counts[k] += v
         return out
 

@@ -17,17 +17,32 @@ the decode loop until all sequences finish.
 Writes may interleave between batches (each batch re-snapshots), which
 is exactly the MVCC behavior a per-query snapshot would give, minus the
 K-1 redundant column passes.
+
+Sharded mode: the server accepts a ``ShardedLSM`` in place of a plain
+tree — both expose the same ``filter_many``/``snapshot`` surface.  Each
+batch then pins ONE cross-shard snapshot vector and rides one
+``filter_many`` per shard (scatter on the shard executor's thread pool,
+one ``multi_filter`` launch per shard per run on 'jax_packed'), so
+batching amortization and shard parallelism compose.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Union
 
 from repro.core.filter_exec import FilterResult
 from repro.core.lsm import LSMTree, Snapshot
 from repro.core.opd import Predicate
+
+try:  # engine surface the server needs: filter_many + snapshot
+    from repro.shard.sharded_lsm import ShardedLSM, ShardSnapshot
+    ScanEngine = Union[LSMTree, ShardedLSM]
+    AnySnapshot = Union[Snapshot, ShardSnapshot]
+except ImportError:  # pragma: no cover - shard layer absent
+    ScanEngine = LSMTree
+    AnySnapshot = Snapshot
 
 
 @dataclasses.dataclass
@@ -54,7 +69,7 @@ class ScanServerStats:
 
 
 class ScanServer:
-    def __init__(self, tree: LSMTree, max_batch: int = 16):
+    def __init__(self, tree: ScanEngine, max_batch: int = 16):
         assert max_batch >= 1
         self.tree = tree
         self.max_batch = max_batch
@@ -79,7 +94,8 @@ class ScanServer:
     # ------------------------------------------------------------------ #
     # server side
     # ------------------------------------------------------------------ #
-    def step(self, snapshot: Optional[Snapshot] = None) -> Dict[int, FilterResult]:
+    def step(self, snapshot: Optional[AnySnapshot] = None
+             ) -> Dict[int, FilterResult]:
         """Fill up to ``max_batch`` slots from the queue and execute them
         as ONE batched filter against a single pinned snapshot."""
         if not self.queue:

@@ -1,0 +1,141 @@
+"""Hot-shard detection and median splits for the sharded engine.
+
+A skewed ingest stream (zipf keys) funnels most writes into one shard,
+whose flush/compaction work then serializes the whole engine.  The
+splitter watches per-shard ingest bytes (``LSMTree.ingest_bytes``) and,
+when one shard is both past an absolute threshold and hotter than its
+peers by ``skew_factor``, splits it at its key median.
+
+The split itself reuses the engine's own compaction machinery: the hot
+tree is flushed, then each half is rebuilt with ONE ``merge_scts`` call
+over ALL of the tree's runs restricted to the half's key range
+(``key_range=``).  Because the merge spans every run of the tree it is
+a bottom merge (``is_bottom=True``): stale versions and tombstones have
+nothing left to shadow, so both halves come out fully compacted — a
+split doubles as a major compaction of the hot shard.
+
+Blob codec note: the halves inherit *references* into the old shard's
+blob files (the shared ``FileStore`` keeps them addressable) but track
+only their own future blob files for GC — pre-split value logs are
+never rewritten or deleted, trading bounded garbage for the guarantee
+that no split can dangle a sibling's (or a pinned snapshot's) values.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.compaction import merge_scts
+from repro.core.lsm import LSMTree
+
+
+@dataclasses.dataclass(frozen=True)
+class RebalanceConfig:
+    split_threshold_bytes: int = 1 << 20  # min ingest before a split
+    skew_factor: float = 2.0              # hot = this x mean shard ingest
+    max_shards: int = 64
+
+
+class HotShardSplitter:
+    """Picks the shard to split, if any, from per-shard ingest counters.
+
+    Ingest is measured *since the shard's last split decision* — fresh
+    halves restart at zero, and a shard that turned out unsplittable
+    (single distinct key) is deferred until another threshold's worth
+    of ingest arrives instead of being re-probed every batch.
+    """
+
+    def __init__(self, cfg: RebalanceConfig):
+        self.cfg = cfg
+
+    @staticmethod
+    def _since(tree: LSMTree) -> int:
+        return tree.ingest_bytes - getattr(tree, "_rebalance_base", 0)
+
+    def pick(self, trees: List[LSMTree]) -> Optional[int]:
+        if len(trees) >= self.cfg.max_shards:
+            return None
+        since = [self._since(t) for t in trees]
+        i = int(np.argmax(since))
+        if since[i] < self.cfg.split_threshold_bytes:
+            return None
+        mean = sum(since) / len(trees)
+        if len(trees) > 1 and since[i] < self.cfg.skew_factor * mean:
+            return None  # hot-ish, but not skewed: splitting won't help
+        return i
+
+    def defer(self, tree: LSMTree) -> None:
+        """Reset the shard's ingest baseline (after a split attempt)."""
+        tree._rebalance_base = tree.ingest_bytes
+
+
+# --------------------------------------------------------------------------- #
+# the split itself
+# --------------------------------------------------------------------------- #
+def split_shard(
+    tree: LSMTree, key_range: Tuple[int, int]
+) -> Optional[Tuple[int, LSMTree, LSMTree]]:
+    """Split ``tree`` (owner of half-open ``key_range``) at its key median.
+
+    Returns ``(pivot, left, right)`` where left owns ``[lo, pivot)`` and
+    right owns ``[pivot, hi)``, or None when the tree holds fewer than
+    two distinct keys (nothing to split).  The halves share the old
+    tree's backing store; the old tree's SCT files are released from it
+    (pinned snapshots keep reading their in-memory SCT objects — only
+    blob value logs need the store, and those are retained).
+    """
+    lo, hi = key_range
+    tree.flush()
+    runs = tree.all_runs()
+    if not runs:
+        return None
+    ks = np.unique(np.concatenate([s.keys for s in runs]))
+    if ks.shape[0] < 2:
+        return None
+    pivot = int(ks[ks.shape[0] // 2])  # > ks[0] >= lo, <= ks[-1] < hi
+    est_half = sum(s.disk_bytes for s in runs) // 2
+    halves: List[LSMTree] = []
+    # Each half re-runs the full merge with a key_range mask, so the
+    # lexsort over all input entries is paid twice per split — accepted:
+    # it keeps the split a pure composition of the (heavily
+    # differential-tested) merge path, and a split already amortizes as
+    # a major compaction of the hot shard.
+    for a, b in ((lo, pivot), (pivot, hi)):
+        half = LSMTree(tree.cfg, store=tree.store)
+        half._seqno = tree._seqno  # new writes stay newer than kept rows
+        out_level = _fitting_level(tree, est_half)
+        res = merge_scts(
+            runs,
+            out_level=out_level,
+            is_bottom=True,  # merge spans every run: nothing left below
+            file_entries=tree.file_entries,
+            store=tree.store,
+            stats=half.compaction_stats,
+            blob_mgr=half.blob_mgr,
+            block_bytes=tree.cfg.block_bytes,
+            bloom_bits_per_key=tree.cfg.bloom_bits_per_key,
+            backend=tree.cfg.compaction_backend,
+            key_range=(a, b),
+        )
+        half.levels[out_level] = sorted(res.outputs, key=lambda s: s.min_key)
+        half.n_compactions += 1
+        half.dict_compares += res.dict_compares
+        half.compaction_in_bytes += sum(s.disk_bytes for s in runs)
+        half.compaction_out_bytes += sum(s.disk_bytes for s in res.outputs)
+        halves.append(half)
+    for s in runs:
+        tree.store.delete(s.file_id)
+    return pivot, halves[0], halves[1]
+
+
+def _fitting_level(tree: LSMTree, nbytes: int) -> int:
+    """Deepest-enough level for one sorted run of ``nbytes`` (leveling
+    invariant: level i holds up to file_bytes * T**i)."""
+    level = 1
+    while (nbytes > tree.level_capacity(level)
+           and level < tree.cfg.max_levels - 1):
+        level += 1
+    return level

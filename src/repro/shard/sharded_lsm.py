@@ -1,0 +1,367 @@
+"""Range-sharded LSM-OPD engine: N independent trees behind a key router.
+
+Each shard is a full ``LSMTree`` (its own memtable, levels, OPD
+dictionaries, stats) owning a contiguous key range; the shards share
+one lock-protected ``FileStore`` so I/O accounting stays global and
+split-rebuilt shards keep addressing existing blob value logs.  Writes
+route by key (``ShardRouter`` binary search); scans scatter per shard
+on the executor's thread pool and gather into one result.
+
+Ordering contract: shard order equals key order and every per-shard
+result is key-sorted, so the gather stage concatenates in shard order
+and the merged ``filter`` / ``filter_many`` / ``range_lookup`` output
+is deterministically key-ascending — ``ShardedLSM(n_shards=1)`` is
+bit-identical to a plain ``LSMTree`` (differential contract in
+tests/test_sharded_lsm.py).
+
+MVCC: ``snapshot()`` pins a *vector* of per-shard snapshots plus the
+boundary table at pin time.  Reads against the snapshot route with the
+pinned boundaries and pinned trees, so a hot-shard split between pin
+and read is invisible: the retired tree's runs (and, for 'blob', its
+value logs) stay readable because the snapshot holds them directly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.filter_exec import FilterResult
+from repro.core.lsm import LSMConfig, LSMTree, Snapshot
+from repro.core.opd import Predicate
+from repro.core.stats import StageStats
+from repro.shard.executor import ShardExecutor
+from repro.shard.rebalance import (HotShardSplitter, RebalanceConfig,
+                                   split_shard)
+from repro.shard.router import KEY_MAX, ShardRouter
+from repro.storage.devices import DeviceModel
+from repro.storage.io import FileStore
+
+_STAGE_STATS = ("filter_stats", "compaction_stats", "flush_stats",
+                "lookup_stats")
+_COUNTERS = ("n_flushes", "n_compactions", "write_stalls", "dict_compares",
+             "compaction_in_bytes", "compaction_out_bytes", "ingest_bytes")
+
+
+@dataclasses.dataclass
+class ShardSnapshot:
+    """Cross-shard MVCC snapshot: per-shard snapshots pinned together
+    with the boundary table that was live at pin time."""
+
+    uppers: List[int]          # exclusive upper bound per pinned shard
+    trees: List[LSMTree]       # the trees those bounds routed to
+    snaps: List[Snapshot]      # one engine snapshot per pinned tree
+
+    def __post_init__(self) -> None:
+        self._search = np.asarray(self.uppers[:-1], np.uint64)
+
+    def shard_of(self, key: int) -> int:
+        if not (0 <= key < self.uppers[-1]):  # same contract as the router
+            raise KeyError(f"key {key} outside [0, {self.uppers[-1]})")
+        return int(np.searchsorted(self._search, np.uint64(key),
+                                   side="right"))
+
+    def entries(self) -> List[Tuple[LSMTree, Snapshot]]:
+        return list(zip(self.trees, self.snaps))
+
+
+class ShardedLSM:
+    def __init__(
+        self,
+        cfg: LSMConfig,
+        n_shards: int = 4,
+        *,
+        key_max: int = KEY_MAX,
+        n_workers: Optional[int] = None,
+        rebalance: Optional[RebalanceConfig] = None,
+        scan_parallel_min: int = 100_000,
+        parallel_ingest: Optional[bool] = None,
+        spill_dir: Optional[str] = None,
+    ):
+        """``scan_parallel_min``: average SCT entries per pinned shard
+        above which scatter reads use the thread pool.  Below it a
+        per-shard scan is dominated by small numpy calls that hold the
+        GIL, and threading only adds convoy latency (measured: 4-shard
+        filters ~1.6x slower threaded at 30k entries/shard, ~1.3x
+        faster at 120k — docs/EXPERIMENTS.md §bench-shard).
+
+        ``parallel_ingest``: fan ``put_batch`` groups out on the pool.
+        Default (None) enables it only for codecs whose write path is
+        dominated by GIL-releasing work (zlib: 'heavy', compressed
+        'blob'); plain-dict memtable inserts are GIL-bound, so threading
+        them is pure overhead.  Flush/compaction maintenance is always
+        shard-parallel via ``compact_all``."""
+        self.cfg = cfg
+        self.store = FileStore(spill_dir)
+        self.router = ShardRouter(n_shards, key_max)
+        self.shards: List[LSMTree] = [
+            LSMTree(cfg, store=self.store) for _ in range(n_shards)
+        ]
+        if n_workers is None:  # oversubscribing cores only adds GIL churn
+            n_workers = min(n_shards, os.cpu_count() or 1)
+        self.executor = ShardExecutor(n_workers)
+        self.scan_parallel_min = int(scan_parallel_min)
+        if parallel_ingest is None:
+            parallel_ingest = cfg.codec == "heavy" or (
+                cfg.codec == "blob" and cfg.blob_compress)
+        self.parallel_ingest = bool(parallel_ingest)
+        self._splitter = (HotShardSplitter(rebalance)
+                          if rebalance is not None else None)
+        self.n_splits = 0
+        self._reb_ticks = 0
+        # stats of trees retired by splits, folded in so engine-level
+        # reports stay monotonic across rebalancing
+        self._retired_stages: Dict[str, StageStats] = {
+            name: StageStats() for name in _STAGE_STATS}
+        self._retired_counts: Dict[str, int] = {c: 0 for c in _COUNTERS}
+
+    # ------------------------------------------------------------------ #
+    # geometry
+    # ------------------------------------------------------------------ #
+    @property
+    def n_shards(self) -> int:
+        return len(self.shards)
+
+    @property
+    def disk_bytes(self) -> int:
+        return sum(t.disk_bytes for t in self.shards)
+
+    @property
+    def dict_bytes(self) -> int:
+        return sum(t.dict_bytes for t in self.shards)
+
+    @property
+    def n_files(self) -> int:
+        return sum(t.n_files for t in self.shards)
+
+    def _stage(self, name: str) -> StageStats:
+        return StageStats.merge_all(
+            [getattr(t, name) for t in self.shards]
+            + [self._retired_stages[name]])
+
+    @property
+    def filter_stats(self) -> StageStats:
+        return self._stage("filter_stats")
+
+    @property
+    def compaction_stats(self) -> StageStats:
+        return self._stage("compaction_stats")
+
+    @property
+    def flush_stats(self) -> StageStats:
+        return self._stage("flush_stats")
+
+    @property
+    def lookup_stats(self) -> StageStats:
+        return self._stage("lookup_stats")
+
+    # ------------------------------------------------------------------ #
+    # writes
+    # ------------------------------------------------------------------ #
+    def put(self, key: int, value: bytes) -> None:
+        self.shards[self.router.shard_of(key)].put(key, value)
+        self._tick_rebalance()
+
+    def delete(self, key: int) -> None:
+        self.shards[self.router.shard_of(key)].delete(key)
+        self._tick_rebalance()
+
+    def put_batch(self, keys: np.ndarray, values: np.ndarray) -> None:
+        """Scatter the batch by shard (one vectorized route) and run the
+        per-shard inserts — plus any flushes/compactions they trigger.
+        Within a shard the original batch order is preserved
+        (boolean-mask selection is stable), so versions of one key keep
+        their relative order.  Thread fan-out obeys ``parallel_ingest``
+        (see __init__: only worth it when the write path releases the
+        GIL)."""
+        keys = np.asarray(keys)
+        values = np.asarray(values)
+        sids = self.router.shard_of_batch(keys)
+        jobs = []
+        for i in range(self.n_shards):
+            m = sids == i
+            if m.any():
+                jobs.append((self.shards[i], keys[m], values[m]))
+        if self.parallel_ingest:
+            self.executor.map(lambda j: j[0].put_batch(j[1], j[2]), jobs)
+        else:
+            for tree, k, v in jobs:
+                tree.put_batch(k, v)
+        self._maybe_rebalance()
+
+    def flush(self) -> None:
+        self.executor.map(lambda t: t.flush(), self.shards)
+
+    def compact_all(self) -> None:
+        """Shard-parallel maintenance: every shard flushes + compacts on
+        the thread pool (numpy/zlib release the GIL in the hot stages)."""
+        self.executor.map(lambda t: t.compact(), self.shards)
+
+    # ------------------------------------------------------------------ #
+    # rebalancing (hot-shard splits)
+    # ------------------------------------------------------------------ #
+    _REBALANCE_EVERY = 256  # single-key writes between splitter checks
+
+    def _tick_rebalance(self) -> None:
+        """Per-key write path: the O(n_shards) splitter scan is only run
+        every ``_REBALANCE_EVERY`` ops (batches check unconditionally —
+        they move threshold-sized volumes at once)."""
+        if self._splitter is None:
+            return
+        self._reb_ticks += 1
+        if self._reb_ticks >= self._REBALANCE_EVERY:
+            self._reb_ticks = 0
+            self._maybe_rebalance()
+
+    def _maybe_rebalance(self) -> None:
+        if self._splitter is None:
+            return
+        while True:
+            i = self._splitter.pick(self.shards)
+            if i is None:
+                return
+            old = self.shards[i]
+            got = split_shard(old, self.router.bounds(i))
+            if got is None:
+                self._splitter.defer(old)  # unsplittable: back off
+                continue
+            pivot, left, right = got
+            self.router.split(i, pivot)
+            self.shards[i:i + 1] = [left, right]
+            self._retire(old)
+            self.n_splits += 1
+
+    def _retire(self, tree: LSMTree) -> None:
+        for name in _STAGE_STATS:
+            self._retired_stages[name] = (
+                self._retired_stages[name].merged(getattr(tree, name)))
+        for c in _COUNTERS:
+            self._retired_counts[c] += getattr(tree, c)
+
+    # ------------------------------------------------------------------ #
+    # reads (scatter-gather against a pinned snapshot vector)
+    # ------------------------------------------------------------------ #
+    def snapshot(self) -> ShardSnapshot:
+        """Pin all shards atomically (single writer: no put can
+        interleave mid-vector) plus the current boundary table."""
+        return ShardSnapshot(
+            uppers=self.router.uppers,
+            trees=list(self.shards),
+            snaps=[t.snapshot() for t in self.shards],
+        )
+
+    def _scan_map(self, fn, items, snap: ShardSnapshot):
+        """Scatter a read across shards: threaded only when the pinned
+        shards carry enough SCT entries for the per-shard numpy work to
+        dominate its GIL-held bookkeeping (``scan_parallel_min``)."""
+        if len(items) > 1:
+            entries = sum(s.n for t_snap in snap.snaps for s in t_snap.runs)
+            if entries >= self.scan_parallel_min * len(items):
+                return self.executor.map(fn, items)
+        return [fn(x) for x in items]
+
+    def get(self, key: int,
+            snapshot: Optional[ShardSnapshot] = None) -> Optional[bytes]:
+        if snapshot is not None:
+            i = snapshot.shard_of(key)
+            return snapshot.trees[i].get(key, snapshot.snaps[i])
+        return self.shards[self.router.shard_of(key)].get(key)
+
+    def filter(self, pred: Predicate,
+               snapshot: Optional[ShardSnapshot] = None) -> FilterResult:
+        snap = snapshot or self.snapshot()
+        results = self._scan_map(
+            lambda e: e[0].filter(pred, snapshot=e[1]), snap.entries(), snap)
+        return self._gather(results)
+
+    def filter_many(self, preds: List[Predicate],
+                    snapshot: Optional[ShardSnapshot] = None
+                    ) -> List[FilterResult]:
+        """Batched scatter-gather: each shard runs ONE ``filter_many``
+        over the whole predicate batch (one pass per run; one
+        ``multi_filter`` launch per run on 'jax_packed'), then results
+        merge per predicate in shard order."""
+        snap = snapshot or self.snapshot()
+        per_shard = self._scan_map(
+            lambda e: e[0].filter_many(preds, snapshot=e[1]),
+            snap.entries(), snap)
+        return [self._gather([shard_res[q] for shard_res in per_shard])
+                for q in range(len(preds))]
+
+    def range_lookup(self, lo: int, hi: int,
+                     snapshot: Optional[ShardSnapshot] = None
+                     ) -> Tuple[np.ndarray, np.ndarray]:
+        snap = snapshot or self.snapshot()
+        hits = [i for i, up in enumerate(snap.uppers)
+                if not (hi < (0 if i == 0 else snap.uppers[i - 1])
+                        or lo >= up)]
+        parts = self._scan_map(
+            lambda i: snap.trees[i].range_lookup(lo, hi, snap.snaps[i]),
+            hits, snap)
+        if len(parts) == 1:
+            return parts[0]
+        width = self.cfg.value_width
+        if not parts:
+            return np.zeros(0, np.uint64), np.zeros(0, f"S{width}")
+        keys = np.concatenate([p[0] for p in parts])
+        vals = np.concatenate([p[1] for p in parts]).astype(f"S{width}")
+        return keys, vals
+
+    def _gather(self, results: List[FilterResult]) -> FilterResult:
+        """Merge per-shard filter results.  Shards partition the key
+        space in order, and every per-shard result is key-sorted, so
+        concatenation IS the deterministic global key order; n=1 passes
+        the single tree's result through bit-identically."""
+        if len(results) == 1:
+            return results[0]
+        keys = np.concatenate([r.keys for r in results])
+        vals = np.concatenate([r.values for r in results]).astype(
+            f"S{self.cfg.value_width}")
+        return FilterResult(
+            keys, vals,
+            n_scanned=sum(r.n_scanned for r in results),
+            n_matched_raw=sum(r.n_matched_raw for r in results),
+        )
+
+    # ------------------------------------------------------------------ #
+    # reporting
+    # ------------------------------------------------------------------ #
+    def io_report(self, device: DeviceModel) -> Dict[str, float]:
+        st = self.store.stats  # shared store: engine-global counters
+        return {
+            "read_bytes": st.bytes_read,
+            "write_bytes": st.bytes_written,
+            "read_ios": st.read_ios,
+            "write_ios": st.write_ios,
+            "modeled_read_s": device.read_seconds(st.bytes_read, st.read_ios),
+            "modeled_write_s": device.write_seconds(st.bytes_written,
+                                                    st.write_ios),
+        }
+
+    def shape_report(self) -> Dict[str, object]:
+        agg = {c: self._retired_counts[c] for c in _COUNTERS}
+        for t in self.shards:
+            for c in _COUNTERS:
+                agg[c] += getattr(t, c)
+        return {
+            "n_shards": self.n_shards,
+            "n_splits": self.n_splits,
+            "boundaries": self.router.uppers,
+            "n_files": self.n_files,
+            "disk_bytes": self.disk_bytes,
+            "dict_bytes": self.dict_bytes,
+            **agg,
+            "per_shard": [t.shape_report() for t in self.shards],
+        }
+
+    def close(self) -> None:
+        self.executor.close()
+
+    def __enter__(self) -> "ShardedLSM":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

@@ -4,8 +4,16 @@ SCT payloads are held in memory (this is a single-box reproduction; the
 paper's files are 32-64 MB and the workloads fit RAM), but every logical
 read/write records the *serialized on-disk size* and an I/O request count
 so `devices.DeviceModel` can convert counters to modeled seconds per
-device class.  An optional `spill_dir` persists real bytes for durability
-tests (checkpoint/restart of the store).
+device class.  An optional `spill_dir` persists real bytes for
+durability: ``FileStore.restore(spill_dir)`` rehydrates a store from its
+spilled files (checkpoint/restart).
+
+Thread safety: one ``FileStore`` may be shared by every shard of a
+``ShardedLSM`` whose executor runs flushes/compactions/filters on a
+thread pool, so id allocation, the object/size tables, and the I/O
+counters are lock-protected.  numpy releases the GIL inside its hot
+loops; the counters here are touched per *file*, not per entry, so the
+locks are off the per-record path.
 """
 
 from __future__ import annotations
@@ -13,7 +21,10 @@ from __future__ import annotations
 import dataclasses
 import os
 import pickle
+import threading
 from typing import Any, Dict, Optional
+
+_SPILL_FMT = "f{fid:08d}.bin"
 
 
 @dataclasses.dataclass
@@ -23,13 +34,19 @@ class IOStats:
     read_ios: int = 0
     write_ios: int = 0
 
+    def __post_init__(self) -> None:
+        # not a dataclass field: replace()/merged() construct fresh locks
+        self._lock = threading.Lock()
+
     def add_read(self, nbytes: int, n_ios: int = 1) -> None:
-        self.bytes_read += int(nbytes)
-        self.read_ios += int(n_ios)
+        with self._lock:
+            self.bytes_read += int(nbytes)
+            self.read_ios += int(n_ios)
 
     def add_write(self, nbytes: int, n_ios: int = 1) -> None:
-        self.bytes_written += int(nbytes)
-        self.write_ios += int(n_ios)
+        with self._lock:
+            self.bytes_written += int(nbytes)
+            self.write_ios += int(n_ios)
 
     def merged(self, other: "IOStats") -> "IOStats":
         return IOStats(
@@ -58,26 +75,51 @@ class FileStore:
         self._objects: Dict[int, Any] = {}
         self._sizes: Dict[int, int] = {}
         self._next_id = 0
+        self._lock = threading.Lock()
         self.stats = IOStats()
         self.spill_dir = spill_dir
         if spill_dir:
             os.makedirs(spill_dir, exist_ok=True)
 
+    @classmethod
+    def restore(cls, spill_dir: str) -> "FileStore":
+        """Rehydrate a store from its spilled files (restart path).
+
+        Rebuilds ``_objects``/``_sizes``/``_next_id`` from every
+        ``f<fid>.bin`` under ``spill_dir``; the next ``alloc_id`` never
+        collides with a restored file.  Restored contents are charged to
+        neither read nor write counters (accounting restarts at zero,
+        like a process restart would).
+        """
+        store = cls(spill_dir)
+        for name in sorted(os.listdir(spill_dir)):
+            if not (name.startswith("f") and name.endswith(".bin")):
+                continue
+            fid = int(name[1:-4])
+            with open(os.path.join(spill_dir, name), "rb") as f:
+                obj, nbytes = pickle.load(f)
+            store._objects[fid] = obj
+            store._sizes[fid] = int(nbytes)
+            store._next_id = max(store._next_id, fid + 1)
+        return store
+
     def alloc_id(self) -> int:
-        fid = self._next_id
-        self._next_id += 1
-        return fid
+        with self._lock:
+            fid = self._next_id
+            self._next_id += 1
+            return fid
 
     def write(self, obj: Any, nbytes: int, fid: Optional[int] = None) -> int:
         if fid is None:
             fid = self.alloc_id()
-        self._objects[fid] = obj
-        self._sizes[fid] = int(nbytes)
+        with self._lock:
+            self._objects[fid] = obj
+            self._sizes[fid] = int(nbytes)
         self.stats.add_write(nbytes)
         if self.spill_dir:
-            path = os.path.join(self.spill_dir, f"f{fid:08d}.bin")
+            path = os.path.join(self.spill_dir, _SPILL_FMT.format(fid=fid))
             with open(path + ".tmp", "wb") as f:
-                pickle.dump(obj, f)
+                pickle.dump((obj, int(nbytes)), f)
             os.replace(path + ".tmp", path)
         return fid
 
@@ -93,12 +135,23 @@ class FileStore:
         return self._objects[fid]
 
     def delete(self, fid: int) -> None:
-        self._objects.pop(fid, None)
-        self._sizes.pop(fid, None)
+        with self._lock:
+            self._objects.pop(fid, None)
+            self._sizes.pop(fid, None)
         if self.spill_dir:
-            path = os.path.join(self.spill_dir, f"f{fid:08d}.bin")
+            path = os.path.join(self.spill_dir, _SPILL_FMT.format(fid=fid))
             if os.path.exists(path):
                 os.remove(path)
+
+    def contains(self, fid: int) -> bool:
+        """Whether ``fid`` is live in the store (public: callers must not
+        reach into ``_sizes``/``_objects``)."""
+        return fid in self._sizes
+
+    def payload(self, fid: int) -> Any:
+        """The stored object, with NO I/O charged — for callers that do
+        their own accounting (blob value reads, GC rewrites)."""
+        return self._objects[fid]
 
     def size_of(self, fid: int) -> int:
         return self._sizes[fid]

@@ -1,0 +1,94 @@
+"""ShardRouter: boundary-table routing, batch routing, and the split
+protocol (tests are oracle-checked against a linear scan over bounds)."""
+
+import numpy as np
+import pytest
+
+from repro.shard import KEY_MAX, ShardRouter
+
+
+def _linear_shard_of(router, key):
+    for i in range(router.n_shards):
+        lo, hi = router.bounds(i)
+        if lo <= key < hi:
+            return i
+    raise AssertionError("bounds do not cover the key space")
+
+
+def test_bounds_partition_key_space():
+    for n, key_max in ((1, 100), (3, 100), (4, 1000), (7, KEY_MAX)):
+        r = ShardRouter(n, key_max)
+        assert r.bounds(0)[0] == 0
+        assert r.bounds(n - 1)[1] == key_max
+        for i in range(1, n):
+            assert r.bounds(i)[0] == r.bounds(i - 1)[1]  # gapless
+            assert r.bounds(i)[0] < r.bounds(i)[1]       # non-empty
+
+
+def test_shard_of_matches_linear_scan():
+    rng = np.random.default_rng(0)
+    r = ShardRouter(5, 10_000)
+    for key in rng.integers(0, 10_000, 200).tolist() + [0, 9_999]:
+        assert r.shard_of(key) == _linear_shard_of(r, key)
+
+
+def test_shard_of_batch_matches_scalar():
+    rng = np.random.default_rng(1)
+    r = ShardRouter(6, 50_000)
+    keys = rng.integers(0, 50_000, 500, dtype=np.uint64)
+    sids = r.shard_of_batch(keys)
+    assert sids.shape == keys.shape
+    for k, s in zip(keys.tolist(), sids.tolist()):
+        assert s == r.shard_of(k)
+
+
+def test_full_uint64_key_space():
+    r = ShardRouter(4)  # default key_max = 2**64
+    assert r.bounds(3)[1] == KEY_MAX
+    assert r.shard_of(0) == 0
+    assert r.shard_of(KEY_MAX - 1) == 3
+    assert r.shard_of(KEY_MAX // 2) in (1, 2)
+
+
+def test_out_of_range_key_raises():
+    r = ShardRouter(2, 100)
+    with pytest.raises(KeyError):
+        r.shard_of(100)
+    with pytest.raises(KeyError):
+        r.shard_of(-1)
+
+
+def test_split_inserts_boundary_and_reroutes():
+    r = ShardRouter(2, 1000)  # [0,500) [500,1000)
+    r.split(0, 200)
+    assert r.uppers == [200, 500, 1000]
+    assert r.n_shards == 3
+    assert r.shard_of(199) == 0 and r.shard_of(200) == 1
+    assert r.shard_of(499) == 1 and r.shard_of(500) == 2
+    # split the (new) last shard too
+    r.split(2, 700)
+    assert r.uppers == [200, 500, 700, 1000]
+    for key in range(0, 1000, 37):
+        assert r.shard_of(key) == _linear_shard_of(r, key)
+
+
+def test_split_rejects_degenerate_pivot():
+    r = ShardRouter(2, 1000)
+    for bad in (0, 500, 501, 1000):  # outside (0, 500) for shard 0
+        with pytest.raises(ValueError):
+            r.split(0, bad)
+
+
+def test_shards_for_range():
+    r = ShardRouter(4, 1000)  # bounds at 250/500/750
+    assert list(r.shards_for_range(0, 999)) == [0, 1, 2, 3]
+    assert list(r.shards_for_range(260, 490)) == [1]
+    assert list(r.shards_for_range(249, 250)) == [0, 1]
+    assert list(r.shards_for_range(700, 10)) == []  # empty interval
+
+
+def test_constructor_validation():
+    with pytest.raises(ValueError):
+        ShardRouter(0)
+    with pytest.raises(ValueError):
+        ShardRouter(11, key_max=10)  # more shards than keys

@@ -1,0 +1,204 @@
+"""Differential contract of the sharded engine (ISSUE 3 acceptance):
+
+* ``ShardedLSM(n_shards=1)`` is BIT-identical to a plain ``LSMTree``
+  for every codec and filter backend — same filter/filter_many/
+  range_lookup/get results including scan counters, same tree shape.
+* ``n_shards > 1`` (with hot-shard splits enabled) produces identical
+  *merged* results, and the gather stage's output order is
+  deterministic (key-ascending).
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import LSMConfig, LSMTree, Predicate
+from repro.serving.scan_server import ScanServer
+from repro.shard import RebalanceConfig, ShardedLSM
+
+VW = 24
+KEY_SPACE = 6000
+
+PREDS = [
+    Predicate("prefix", b"pfx_00"),
+    Predicate("prefix", b"pfx_1"),
+    Predicate("range", b"pfx_010", b"pfx_080"),
+    Predicate("eq", b"pfx_042_c"),
+    Predicate("ge", b"pfx_120"),
+    Predicate("le", b"", b"pfx_015"),
+]
+
+
+def _cfg(codec, **kw):
+    base = dict(codec=codec, value_width=VW, file_bytes=16 * 1024,
+                l0_limit=2, size_ratio=3, max_levels=5)
+    base.update(kw)
+    return LSMConfig(**base)
+
+
+def _workload(seed, n=2500):
+    """Batched puts interleaved with deletes, skewed toward low keys so
+    rebalance-enabled runs actually split."""
+    rng = np.random.default_rng(seed)
+    ops = []
+    m = n // 5
+    for _ in range(5):
+        lo_frac = rng.random() < 0.6
+        space = KEY_SPACE // 8 if lo_frac else KEY_SPACE
+        keys = rng.integers(0, space, m, dtype=np.uint64)
+        ids = rng.integers(0, 150, m)
+        vals = np.asarray(
+            [b"pfx_%03d_%c" % (int(x), 97 + int(x) % 7) for x in ids],
+            dtype=f"S{VW}")
+        ops.append(("batch", keys, vals))
+        ops.append(("del", rng.integers(0, space, m // 6, dtype=np.uint64)))
+    return ops
+
+
+def _apply(tree, ops):
+    for op in ops:
+        if op[0] == "batch":
+            tree.put_batch(op[1], op[2])
+        else:
+            for k in op[1].tolist():
+                tree.delete(int(k))
+
+
+def _assert_filter_identical(a, b):
+    assert np.array_equal(a.keys, b.keys)
+    assert np.array_equal(a.values, b.values)
+    assert a.n_scanned == b.n_scanned
+    assert a.n_matched_raw == b.n_matched_raw
+
+
+def _assert_results_match(plain, sharded, *, bit_identical):
+    """Merged read parity; with ``bit_identical`` also scan counters."""
+    for pred in PREDS:
+        ra, rb = plain.filter(pred), sharded.filter(pred)
+        assert np.array_equal(ra.keys, rb.keys), pred
+        assert np.array_equal(ra.values, rb.values), pred
+        assert np.all(np.diff(rb.keys.astype(np.uint64)) > 0)  # sorted
+        if bit_identical:
+            assert (ra.n_scanned, ra.n_matched_raw) == (rb.n_scanned,
+                                                        rb.n_matched_raw)
+    many_a = plain.filter_many(PREDS)
+    many_b = sharded.filter_many(PREDS)
+    for ra, rb in zip(many_a, many_b):
+        assert np.array_equal(ra.keys, rb.keys)
+        assert np.array_equal(ra.values, rb.values)
+    for lo, hi in ((0, KEY_SPACE), (100, 700), (KEY_SPACE // 8 - 5,
+                                                KEY_SPACE // 8 + 5)):
+        ka, va = plain.range_lookup(lo, hi)
+        kb, vb = sharded.range_lookup(lo, hi)
+        assert np.array_equal(ka, kb)
+        assert np.array_equal(va, vb)
+    rng = np.random.default_rng(99)
+    for k in rng.integers(0, KEY_SPACE, 80).tolist():
+        assert plain.get(k) == sharded.get(k)
+
+
+# --------------------------------------------------------------------------- #
+# n_shards = 1: bit-identical to a plain LSMTree, every codec
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("codec", ["opd", "plain", "heavy", "blob"])
+def test_single_shard_bit_identical(codec):
+    cfg = _cfg(codec)
+    ops = _workload(0)
+    plain = LSMTree(cfg)
+    _apply(plain, ops)
+    with ShardedLSM(cfg, n_shards=1, key_max=KEY_SPACE) as sharded:
+        _apply(sharded, ops)
+        _assert_results_match(plain, sharded, bit_identical=True)
+        # the one shard IS the tree: shapes must agree exactly
+        assert sharded.n_files == plain.n_files
+        assert sharded.disk_bytes == plain.disk_bytes
+        rep = sharded.shape_report()
+        assert rep["n_flushes"] == plain.n_flushes
+        assert rep["n_compactions"] == plain.n_compactions
+        assert rep["dict_compares"] == plain.dict_compares
+
+
+@pytest.mark.parametrize("backend", ["jax", "jax_packed"])
+def test_single_shard_bit_identical_jax_backends(backend):
+    cfg = _cfg("opd", filter_backend=backend)
+    ops = _workload(1, n=1200)
+    plain = LSMTree(cfg)
+    _apply(plain, ops)
+    with ShardedLSM(cfg, n_shards=1, key_max=KEY_SPACE) as sharded:
+        _apply(sharded, ops)
+        _assert_results_match(plain, sharded, bit_identical=True)
+
+
+# --------------------------------------------------------------------------- #
+# n_shards > 1 (+ splits): identical merged results, deterministic order
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("codec", ["opd", "plain", "heavy", "blob"])
+@pytest.mark.parametrize("n_shards", [2, 4])
+def test_multi_shard_merged_parity(codec, n_shards):
+    cfg = _cfg(codec)
+    ops = _workload(2)
+    plain = LSMTree(cfg)
+    _apply(plain, ops)
+    reb = RebalanceConfig(split_threshold_bytes=24_000, skew_factor=1.3,
+                          max_shards=8)
+    with ShardedLSM(cfg, n_shards=n_shards, key_max=KEY_SPACE,
+                    rebalance=reb) as sharded:
+        _apply(sharded, ops)
+        assert sharded.n_splits > 0, "workload should trigger a split"
+        _assert_results_match(plain, sharded, bit_identical=False)
+
+
+@pytest.mark.parametrize("backend", ["jax_packed"])
+def test_multi_shard_merged_parity_jax_backend(backend):
+    cfg = _cfg("opd", filter_backend=backend)
+    ops = _workload(3, n=1200)
+    plain = LSMTree(cfg)
+    _apply(plain, ops)
+    with ShardedLSM(cfg, n_shards=3, key_max=KEY_SPACE) as sharded:
+        _apply(sharded, ops)
+        _assert_results_match(plain, sharded, bit_identical=False)
+
+
+def test_multi_shard_threaded_scan_parity():
+    """Force the thread-pool scatter path (scan_parallel_min=0) and the
+    threaded ingest path: results must not depend on scheduling."""
+    cfg = _cfg("opd")
+    ops = _workload(4)
+    plain = LSMTree(cfg)
+    _apply(plain, ops)
+    with ShardedLSM(cfg, n_shards=4, key_max=KEY_SPACE, n_workers=4,
+                    scan_parallel_min=0, parallel_ingest=True) as sharded:
+        _apply(sharded, ops)
+        _assert_results_match(plain, sharded, bit_identical=False)
+
+
+def test_compact_all_preserves_results():
+    cfg = _cfg("opd")
+    ops = _workload(5)
+    plain = LSMTree(cfg)
+    _apply(plain, ops)
+    with ShardedLSM(cfg, n_shards=4, key_max=KEY_SPACE) as sharded:
+        _apply(sharded, ops)
+        sharded.compact_all()
+        for t in sharded.shards:
+            assert t.memtable.n_versions == 0  # everything flushed
+        _assert_results_match(plain, sharded, bit_identical=False)
+
+
+# --------------------------------------------------------------------------- #
+# serving: ScanServer drains a sharded engine exactly like a tree
+# --------------------------------------------------------------------------- #
+def test_scan_server_sharded_mode():
+    cfg = _cfg("opd")
+    ops = _workload(6, n=1500)
+    plain = LSMTree(cfg)
+    _apply(plain, ops)
+    with ShardedLSM(cfg, n_shards=3, key_max=KEY_SPACE) as sharded:
+        _apply(sharded, ops)
+        srv = ScanServer(sharded, max_batch=4)
+        rids = srv.submit_many(PREDS)
+        out = srv.drain()
+        assert srv.stats.n_batches == 2  # 6 preds / max_batch 4
+        for rid, pred in zip(rids, PREDS):
+            want = plain.filter(pred)
+            assert np.array_equal(out[rid].keys, want.keys)
+            assert np.array_equal(out[rid].values, want.values)
