@@ -1,0 +1,130 @@
+"""Sync vs. background maintenance: ingest latency distribution + stalls.
+
+The headline number for the background pipeline (docs/EXPERIMENTS.md
+§bench-maintenance): with ``maintenance='sync'`` every flush — and,
+past ``l0_limit``, every L0 compaction cascade — runs inline on the
+writer's thread, so the put that crosses a threshold pays the whole
+maintenance bill and the per-op latency distribution grows a tail that
+IS the compaction time.  With ``maintenance='background'`` the same put
+only rotates the memtable (O(1)) and maintenance overlaps on the
+scheduler's thread pool; the writer is only delayed by the graduated
+throttle when it truly outruns the hardware.
+
+Measured per (codec, mode): per-op ingest latency p50/p99/max (µs),
+total wall time, stall/slowdown seconds, and the final tree shape.
+After both modes finish, the filter result over the drained background
+tree is asserted bit-identical to the sync tree — the benchmark doubles
+as an in-process differential check, like bench_shard's smoke contract.
+
+    PYTHONPATH=src:. python benchmarks/bench_maintenance.py [--n N]
+        [--codec opd|plain|heavy|blob|all] [--smoke]
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from benchmarks._harness import BenchRow, gen_keys, gen_values, pct
+from repro.core import LSMConfig, LSMTree, Predicate
+
+CODECS = ("opd", "plain", "heavy", "blob")
+
+
+def _cfg(codec: str, mode: str, file_bytes: int) -> LSMConfig:
+    return LSMConfig(codec=codec, value_width=32, file_bytes=file_bytes,
+                     l0_limit=4, size_ratio=8, maintenance=mode)
+
+
+CHUNK = 250  # ops per timed ingest chunk (one client "request")
+
+
+def _ingest(tree: LSMTree, keys: np.ndarray, vals: np.ndarray
+            ) -> List[float]:
+    """Per-chunk ingest latencies in µs/op.  Chunk granularity (vs
+    per-op) is what a client batching CHUNK writes observes, and it puts
+    maintenance where the metric can see it: a flush fires every ~couple
+    of chunks, so an inline compaction cascade lands squarely in the
+    chunk p99 instead of hiding past per-op p99.97."""
+    lats = []
+    perf = time.perf_counter
+    for lo in range(0, keys.shape[0], CHUNK):
+        hi = min(lo + CHUNK, keys.shape[0])
+        t0 = perf()
+        tree.put_batch(keys[lo:hi], vals[lo:hi])
+        lats.append((perf() - t0) / (hi - lo))
+    return lats
+
+
+def run_one(codec: str, n: int, file_bytes: int = 256 * 1024
+            ) -> List[BenchRow]:
+    keys = gen_keys(n, seed=11)
+    vals = gen_values(n, 32, ndv_ratio=0.01, seed=12)
+    pred = Predicate("prefix", b"cat_00")
+    rows = []
+    results: Dict[str, object] = {}
+    shapes: Dict[str, Dict] = {}
+    for mode in ("sync", "background"):
+        tree = LSMTree(_cfg(codec, mode, file_bytes))
+        t0 = time.perf_counter()
+        lats = _ingest(tree, keys, vals)
+        ingest_wall = time.perf_counter() - t0
+        tree.flush()
+        tree.drain()
+        wall = time.perf_counter() - t0
+        res = tree.filter(pred)
+        results[mode] = res
+        shapes[mode] = tree.shape_report()
+        us = [x * 1e6 for x in lats]  # µs/op, one sample per chunk
+        rows.append(BenchRow(
+            f"maintenance/{codec}/{mode}",
+            float(np.mean(us)),
+            {
+                "p50_us": pct(us, 50), "p99_us": pct(us, 99),
+                "max_us": pct(us, 100),
+                "ingest_wall_s": ingest_wall, "wall_s": wall,
+                "stall_s": shapes[mode]["stall_seconds"],
+                "slowdown_s": shapes[mode]["slowdown_seconds"],
+                "write_stalls": shapes[mode]["write_stalls"],
+                "write_slowdowns": shapes[mode]["write_slowdowns"],
+                "n_compactions": shapes[mode]["n_compactions"],
+                "n_files": shapes[mode]["n_files"],
+            },
+        ))
+        tree.close()
+    rs, rb = results["sync"], results["background"]
+    assert rs.keys.tolist() == rb.keys.tolist(), (
+        f"{codec}: background filter keys diverge from sync")
+    assert rs.values.tolist() == rb.values.tolist(), (
+        f"{codec}: background filter values diverge from sync")
+    return rows
+
+
+def run(n: int = 40_000, codecs=CODECS) -> List[BenchRow]:
+    out: List[BenchRow] = []
+    for codec in codecs:
+        out.extend(run_one(codec, n))
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=40_000)
+    ap.add_argument("--codec", default="all",
+                    choices=list(CODECS) + ["all"])
+    ap.add_argument("--smoke", action="store_true",
+                    help="small n, one codec — CI parity check")
+    args = ap.parse_args()
+    n = 12_000 if args.smoke else args.n
+    codecs = CODECS if args.codec == "all" else (args.codec,)
+    if args.smoke and args.codec == "all":
+        codecs = ("opd", "blob")
+    for row in run(n, codecs):
+        print(row.csv(), flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -14,7 +14,8 @@ import time
 
 from benchmarks import (bench_compaction, bench_costmodel, bench_filter,
                         bench_htap, bench_hybrid, bench_insert,
-                        bench_kernels, bench_ndv_skew, bench_shard)
+                        bench_kernels, bench_maintenance, bench_ndv_skew,
+                        bench_shard)
 
 SUITES = {
     # paper Figure 6 (left): insertion throughput vs value size
@@ -29,6 +30,9 @@ SUITES = {
     "ndv_skew": lambda full: bench_ndv_skew.run(n=150_000 if full else 30_000),
     # shard-scaling sweep (ingest+filter throughput vs shard count & skew)
     "shard": lambda full: bench_shard.run(n=480_000 if full else 120_000),
+    # sync vs background maintenance: ingest p50/p99 latency + stalls
+    "maintenance": lambda full: bench_maintenance.run(
+        n=150_000 if full else 40_000),
     # paper Figure 9: filter latency vs value size
     "filter": lambda full: bench_filter.run(n=200_000 if full else 40_000),
     # paper Figure 9 (selectivity sweep)

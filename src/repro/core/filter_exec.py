@@ -34,7 +34,7 @@ from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.memtable import MemTable
+from repro.core.memtable import MemTable, MemTables, as_mems
 from repro.core.opd import OPD, Predicate
 from repro.core.sct import SCT, BlobManager
 from repro.core.stats import StageStats
@@ -71,7 +71,7 @@ class FilterResult:
 
 def evaluate_filter(
     runs: List[SCT],
-    memtable: Optional[MemTable],
+    memtable: MemTables,
     pred: Predicate,
     *,
     stats: StageStats,
@@ -90,7 +90,7 @@ def evaluate_filter(
 
 def evaluate_filter_many(
     runs: List[SCT],
-    memtable: Optional[MemTable],
+    memtable: MemTables,
     preds: Sequence[Predicate],
     *,
     stats: StageStats,
@@ -110,6 +110,7 @@ def evaluate_filter_many(
     n_preds = len(preds)
     if n_preds == 0:
         return []
+    mems = as_mems(memtable)
     snap = np.uint64(snapshot_seqno) if snapshot_seqno is not None else None
 
     # ---- stage: retrieval (locate candidate files across all levels) ----- #
@@ -163,16 +164,18 @@ def evaluate_filter_many(
                     cand_vals[q].append(s.values[idx])
                 else:
                     cand_vals[q].append(decoded[i][idx])
-        # memtable (newest data) — small, row-oriented scan, walked once
-        if memtable is not None and memtable.n_versions:
-            mk, ms, mv = _memtable_visible(memtable, snap)
-            if mk.shape[0]:
-                for q, p in enumerate(preds):
-                    m = string_mask(mv, p)
-                    if m.any():
-                        cand_keys[q].append(mk[m])
-                        cand_seqs[q].append(ms[m])
-                        cand_vals[q].append(mv[m])
+        # memtable stack (newest data) — small, row-oriented scans,
+        # walked once per memtable.  Rows shadowed by a newer memtable
+        # (or run) are discarded by the seqno merge below, so simply
+        # concatenating every memtable's newest-visible rows is correct.
+        mk, ms, mv = _memtable_visible(mems, snap)
+        if mk.shape[0]:
+            for q, p in enumerate(preds):
+                m = string_mask(mv, p)
+                if m.any():
+                    cand_keys[q].append(mk[m])
+                    cand_seqs[q].append(ms[m])
+                    cand_vals[q].append(mv[m])
 
     # ---- stage: merge (discard stale versions, per predicate) ------------ #
     results = []
@@ -181,7 +184,7 @@ def evaluate_filter_many(
         # newest visible seqno, tombstones included); the per-predicate
         # shadow check below is then one searchsorted, not a Python probe
         # per candidate.
-        mem_newest = _memtable_newest(memtable, snap)
+        mem_newest = _memtable_newest(mems, snap)
         for q in range(n_preds):
             results.append(_merge_candidates(
                 cand_keys[q], cand_seqs[q], cand_vals[q],
@@ -271,48 +274,45 @@ def _read_blob_values(s: SCT, blob_mgr: BlobManager) -> np.ndarray:
     return out
 
 
-def _memtable_visible(memtable: MemTable, snap) -> Tuple:
-    """Newest visible (key, seqno, value) triples in the memtable — the
-    per-key chain walk happens once per batch, predicates mask after."""
-    keys, seqs, vals = [], [], []
-    max_seq = None if snap is None else int(snap)
-    for key in memtable._chains:
-        got = memtable.get(key, max_seq)
-        if got is None or got[1] is None:
-            continue
-        keys.append(key)
-        seqs.append(got[0])
-        vals.append(got[1])
-    w = memtable.value_width
-    if not keys:
-        return np.zeros(0, np.uint64), np.zeros(0, np.uint64), np.zeros(0, f"S{w}")
-    return (np.asarray(keys, np.uint64), np.asarray(seqs, np.uint64),
-            np.asarray(vals, f"S{w}"))
+def _memtable_visible(mems: List[MemTable], snap) -> Tuple:
+    """Newest visible live (key, seqno, value) triples across the
+    memtable stack — one locked columnar pass per memtable, predicates
+    mask after.  Rows a newer memtable shadows are included; the seqno
+    merge downstream discards them."""
+    parts = [m.newest_rows(None if snap is None else int(snap))
+             for m in mems if m.n_versions]
+    parts = [(k[~t], s[~t], v[~t]) for k, s, t, v in parts]
+    parts = [p for p in parts if p[0].shape[0]]
+    w = mems[0].value_width if mems else 8
+    if not parts:
+        return (np.zeros(0, np.uint64), np.zeros(0, np.uint64),
+                np.zeros(0, f"S{w}"))
+    return (np.concatenate([p[0] for p in parts]),
+            np.concatenate([p[1] for p in parts]),
+            np.concatenate([p[2] for p in parts]))
 
 
 def _memtable_newest(
-    memtable: Optional[MemTable], snap
+    mems: List[MemTable], snap
 ) -> Optional[Tuple[np.ndarray, np.ndarray]]:
-    """Newest visible seqno per memtable key, *including tombstones* (a
-    newer tombstone shadows older candidates), as key-sorted arrays so
-    the shadow check is one ``searchsorted`` per predicate instead of a
-    per-candidate chain probe."""
-    if memtable is None or not memtable.n_versions:
-        return None
+    """Newest visible seqno per key across the memtable stack,
+    *including tombstones* (a newer tombstone shadows older candidates),
+    as key-sorted arrays so the shadow check is one ``searchsorted`` per
+    predicate instead of a per-candidate chain probe."""
     max_seq = None if snap is None else int(snap)
-    keys, seqs = [], []
-    for key in memtable._chains:
-        got = memtable.get(key, max_seq)
-        if got is None:
-            continue
-        keys.append(key)
-        seqs.append(got[0])
-    if not keys:
+    parts = [m.newest_rows(max_seq)[:2] for m in mems if m.n_versions]
+    parts = [p for p in parts if p[0].shape[0]]
+    if not parts:
         return None
-    mk = np.asarray(keys, np.uint64)
-    ms = np.asarray(seqs, np.uint64)
-    order = np.argsort(mk)
-    return mk[order], ms[order]
+    mk = np.concatenate([p[0] for p in parts])
+    ms = np.concatenate([p[1] for p in parts])
+    # newest per key across memtables: sort by (key, seqno) and keep the
+    # last row of each key group (the max seqno)
+    order = np.lexsort((ms, mk))
+    mk, ms = mk[order], ms[order]
+    last = np.ones(mk.shape[0], np.bool_)
+    last[:-1] = mk[1:] != mk[:-1]
+    return mk[last], ms[last]
 
 
 def _global_newest(

@@ -17,7 +17,7 @@ from typing import List, Optional, Tuple
 
 import numpy as np
 
-from repro.core.memtable import MemTable
+from repro.core.memtable import MemTable, MemTables, as_mems
 from repro.core.sct import SCT, BlobManager
 from repro.core.stats import StageStats
 from repro.storage.io import FileStore
@@ -27,7 +27,7 @@ _SEQ_MAX = np.uint64(0xFFFFFFFFFFFFFFFF)
 
 def range_scan(
     runs: List[SCT],
-    memtable: Optional[MemTable],
+    memtable: MemTables,
     lo: int,
     hi: int,
     *,
@@ -37,10 +37,16 @@ def range_scan(
     snapshot_seqno: Optional[int] = None,
     block_bytes: int = 4096,
 ) -> Tuple[np.ndarray, np.ndarray]:
-    """Newest visible (keys, values) with lo <= key <= hi, tombstones elided."""
+    """Newest visible (keys, values) with lo <= key <= hi, tombstones elided.
+
+    ``memtable`` may be a single MemTable or the background engine's
+    memtable stack (active + frozen queue); rows shadowed across
+    memtables are discarded by the seqno merge like any other stale
+    version."""
     snap = np.uint64(snapshot_seqno) if snapshot_seqno is not None else None
+    mems = as_mems(memtable)
     ks, sqs, tbs, vls = [], [], [], []
-    width = runs[0].value_width if runs else (memtable.value_width if memtable else 8)
+    width = runs[0].value_width if runs else (mems[0].value_width if mems else 8)
 
     with stats.time("read"):
         slices = []
@@ -68,8 +74,8 @@ def range_scan(
             sqs.append(s.seqnos[a:b])
             tbs.append(s.tombs[a:b])
             vls.append(_decode_slice(s, a, b, store, blob_mgr))
-        if memtable is not None:
-            mk, ms, mt, mv = _memtable_slice(memtable, lo, hi, snap, width)
+        for mem in mems:
+            mk, ms, mt, mv = _memtable_slice(mem, lo, hi, snap, width)
             if mk.shape[0]:
                 ks.append(mk), sqs.append(ms), tbs.append(mt), vls.append(mv)
 
@@ -121,16 +127,5 @@ def _decode_slice(s: SCT, a: int, b: int, store: FileStore,
 
 
 def _memtable_slice(memtable: MemTable, lo: int, hi: int, snap, width: int):
-    rows = list(memtable.range_items(lo, hi, None if snap is None else int(snap)))
-    n = len(rows)
-    keys = np.zeros(n, np.uint64)
-    seqs = np.zeros(n, np.uint64)
-    tombs = np.zeros(n, np.bool_)
-    vals = np.zeros(n, f"S{width}")
-    for i, (k, sq, v) in enumerate(rows):
-        keys[i], seqs[i] = k, sq
-        if v is None:
-            tombs[i] = True
-        else:
-            vals[i] = v
-    return keys, seqs, tombs, vals
+    return memtable.newest_rows(None if snap is None else int(snap),
+                                lo=lo, hi=hi)

@@ -1,22 +1,49 @@
 """LSM-OPD storage engine (paper §3/§4).
 
-Out-of-place ingestion -> memtable -> flush to SCTs (L0, tiered runs with
-a stall limit, per RocksDB and the paper's footnote 1) -> leveling
-compaction into single-sorted-run levels with size ratio T.  Codec is
-pluggable ('opd' | 'plain' | 'heavy' | 'blob') so the paper's four
-competitors share one engine and all benchmark comparisons are
+Out-of-place ingestion -> memtable -> flush to SCTs (L0, tiered runs) ->
+leveling compaction into single-sorted-run levels with size ratio T.
+Codec is pluggable ('opd' | 'plain' | 'heavy' | 'blob') so the paper's
+four competitors share one engine and all benchmark comparisons are
 like-for-like.
 
+State management is an immutable **version set** (``core.version``): the
+tree shape lives in ``VersionSet.current`` (frozen per-level run
+tuples), every flush/compaction/GC installs a ``VersionEdit`` atomically
+under a light mutex, and each edit is appended to a manifest log in the
+store's spill directory so ``LSMTree.restore`` rebuilds the exact tree
+shape after a crash (``FileStore.restore`` recovers the bytes, the
+manifest recovers the structure).
+
+Maintenance runs in one of two modes (``LSMConfig.maintenance``):
+
+  'sync'        (default) flushes and compactions run inline on the
+                writer's thread — deterministic, the mode every
+                differential test baselines against.
+  'background'  the active memtable rotates into a frozen (immutable but
+                still readable) queue at ``mem_bytes``; a background
+                flush worker drains the queue and a debt-scored
+                compaction worker keeps levels in shape
+                (``core.maintenance``).  The old forced write stall is
+                replaced by graduated throttling: past ``l0_slowdown``
+                runs in L0 the writer is delayed, past ``l0_stop`` (or a
+                full frozen queue) it blocks until maintenance catches
+                up.
+
 MVCC follows the paper's lightweight file-snapshot scheme: a snapshot
-pins (seqno, memtable reference, the set of currently-visible SCTs).
-Compactions install new files; pinned objects stay readable because the
-snapshot holds direct references (immutability does the rest).
+pins (seqno, the memtable stack — active + frozen queue, newest first —
+and the current version's runs).  Maintenance installs new versions;
+pinned objects stay readable because the snapshot holds direct
+references (immutability does the rest).  Blob GC is copy-on-write: a
+run whose value pointers move is *rebuilt* and swapped in via an edit,
+so concurrent readers never observe a half-rewritten run.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
+import warnings
 import weakref
 from typing import Dict, List, Optional, Set, Tuple
 
@@ -26,10 +53,13 @@ from repro.core.compaction import merge_scts
 from repro.core.filter_exec import (FilterResult, evaluate_filter,
                                     evaluate_filter_many)
 from repro.core.iterator import range_scan
+from repro.core.maintenance import (THROTTLE_NONE, THROTTLE_SLOWDOWN,
+                                    THROTTLE_STOP, MaintenanceScheduler)
 from repro.core.memtable import MemTable
 from repro.core.opd import Predicate
 from repro.core.sct import SCT, BlobManager, build_sct, record_disk_bytes
 from repro.core.stats import StageStats
+from repro.core.version import Version, VersionEdit, VersionSet
 from repro.storage.devices import DeviceModel
 from repro.storage.io import FileStore
 
@@ -42,7 +72,7 @@ class LSMConfig:
     file_bytes: int = 4 * 2**20        # F (paper: 32-64MB; scaled for CI)
     memtable_bytes: Optional[int] = None
     size_ratio: int = 10               # T
-    l0_limit: int = 4                  # forced-write-stall limit (footnote 1)
+    l0_limit: int = 4                  # L0 compaction trigger (footnote 1)
     block_bytes: int = 4096
     bloom_bits_per_key: int = 10
     max_levels: int = 7
@@ -50,10 +80,26 @@ class LSMConfig:
     blob_gc_threshold: float = 0.5
     filter_backend: str = "numpy"      # 'numpy' | 'jax' | 'jax_packed'
     compaction_backend: str = "numpy"  # 'numpy' | 'jax' | 'jax_packed'
+    # --- maintenance pipeline (docs/DESIGN.md §9) ---
+    maintenance: str = "sync"          # 'sync' | 'background'
+    l0_slowdown: Optional[int] = None  # default: l0_limit + 4
+    l0_stop: Optional[int] = None      # default: l0_limit + 8
+    slowdown_seconds: float = 0.002    # per-rotation delay in the band
+    max_immutables: int = 4            # frozen-memtable queue backpressure
 
     @property
     def mem_bytes(self) -> int:
         return self.memtable_bytes or self.file_bytes
+
+    @property
+    def l0_slowdown_trigger(self) -> int:
+        return self.l0_slowdown if self.l0_slowdown is not None \
+            else self.l0_limit + 4
+
+    @property
+    def l0_stop_trigger(self) -> int:
+        return self.l0_stop if self.l0_stop is not None \
+            else self.l0_limit + 8
 
 
 @dataclasses.dataclass
@@ -61,16 +107,34 @@ class Snapshot:
     seqno: int
     memtable: MemTable
     runs: List[SCT]
+    # active + frozen memtables, newest first (None: pre-version-set
+    # callers constructed (seqno, memtable, runs) — fall back to the one)
+    memtables: Optional[List[MemTable]] = None
+    version: Optional[Version] = None
+
+    @property
+    def mems(self) -> List[MemTable]:
+        return self.memtables if self.memtables is not None \
+            else [self.memtable]
 
 
 class LSMTree:
     def __init__(self, cfg: LSMConfig, spill_dir: Optional[str] = None,
                  store: Optional[FileStore] = None,
-                 blob_mgr: Optional[BlobManager] = None):
+                 blob_mgr: Optional[BlobManager] = None,
+                 manifest: Optional[str] = None,
+                 scheduler: Optional[MaintenanceScheduler] = None):
         """``store``/``blob_mgr`` injection lets several trees share one
         backing store (the sharded engine: N shard trees over one disk,
         so split-rebuilt shards keep addressing existing blob files and
-        I/O accounting stays in one place).  Default: private store."""
+        I/O accounting stays in one place).  Default: private store.
+
+        ``manifest`` names this tree's manifest log inside the store's
+        spill dir (shard trees sharing a dir need distinct names).
+        ``scheduler``: with ``cfg.maintenance='background'``, the
+        maintenance scheduler to register with; None creates a private
+        one (the sharded engine passes a shared instance so one
+        scheduler drives all shards)."""
         self.cfg = cfg
         self.store = store if store is not None else FileStore(spill_dir)
         if blob_mgr is not None:
@@ -82,18 +146,37 @@ class LSMTree:
                 if cfg.codec == "blob" else None
             )
         self.memtable = MemTable(cfg.value_width, cfg.key_bytes)
-        self.levels: List[List[SCT]] = [[] for _ in range(cfg.max_levels)]
+        self.versions = VersionSet(self.store, cfg.max_levels,
+                                   manifest=manifest)
+        self._immutables: List[MemTable] = []  # newest first; flush pops tail
+        self._lock = threading.RLock()
         self._seqno = 0
         self._cursors: Dict[int, int] = {}  # round-robin compaction cursors
+        # maintenance mode
+        self._owns_sched = False
+        if cfg.maintenance == "background":
+            if scheduler is None:
+                scheduler = MaintenanceScheduler()
+                self._owns_sched = True
+            scheduler.register(self)
+            self._sched: Optional[MaintenanceScheduler] = scheduler
+        elif cfg.maintenance == "sync":
+            self._sched = None
+        else:
+            raise ValueError(f"unknown maintenance mode {cfg.maintenance!r}")
         # stats
         self.compaction_stats = StageStats()
         self.filter_stats = StageStats()
         self.flush_stats = StageStats()
         self.lookup_stats = StageStats()
+        self.throttle_stats = StageStats()  # 'slowdown' / 'stop' stages
         self.n_flushes = 0
         self.n_compactions = 0
         self.write_stalls = 0
         self.stall_seconds = 0.0
+        self.write_slowdowns = 0
+        self.slowdown_seconds = 0.0
+        self.cascade_truncations = 0
         self.compaction_in_bytes = 0
         self.compaction_out_bytes = 0
         self.dict_compares = 0  # cumulative D_i terms across compactions
@@ -101,17 +184,77 @@ class LSMTree:
         # weakrefs to handed-out snapshots: blob GC must not delete value
         # logs a live snapshot can still address (see _gc_blobs)
         self._snapshots: List["weakref.ref[Snapshot]"] = []
+        # blob logs replaced by copy-on-write GC: unlinked one pass later
+        # so readers that grabbed the pre-replace version finish first
+        self._zombie_blobs: List[int] = []
+
+    # ------------------------------------------------------------------ #
+    # restart
+    # ------------------------------------------------------------------ #
+    @classmethod
+    def restore(cls, cfg: LSMConfig, spill_dir: str,
+                manifest: Optional[str] = None,
+                store: Optional[FileStore] = None,
+                scheduler: Optional[MaintenanceScheduler] = None,
+                gc_orphans: bool = True) -> "LSMTree":
+        """Rebuild a tree after a crash/restart: ``FileStore.restore``
+        recovers the spilled bytes, the manifest replay recovers the tree
+        shape and seqno watermark, and SCT files a crash stranded between
+        spill and manifest append are garbage-collected.  Unflushed
+        memtable contents are lost (there is no WAL — flush/drain before
+        a planned shutdown)."""
+        if store is None:
+            store = FileStore.restore(spill_dir)
+        tree = cls(cfg, store=store, manifest=manifest, scheduler=scheduler)
+        tree.versions = VersionSet.recover(store, cfg.max_levels,
+                                           manifest=manifest)
+        if gc_orphans:
+            # sole-tree stores only: a sharded restore GCs against the
+            # union of all shard versions instead (other shards' live
+            # files are NOT orphans)
+            tree.versions.gc_orphans()
+        tree._seqno = tree.versions.last_seqno
+        if tree.blob_mgr is not None:
+            # garbage ratios restart at zero: the manifest records runs,
+            # not per-log death counts; future drops re-accrue garbage
+            live: Dict[int, int] = {}
+            for s in tree.versions.current.all_runs():
+                if s.vfids is None or not s.n:
+                    continue
+                fids, counts = np.unique(s.vfids[s.vfids >= 0],
+                                         return_counts=True)
+                for f, c in zip(fids, counts):
+                    live[int(f)] = live.get(int(f), 0) + int(c)
+            tree.blob_mgr.live = dict(live)
+            tree.blob_mgr.total = dict(live)
+        return tree
+
+    def close(self) -> None:
+        if self._sched is not None and self._owns_sched:
+            self._sched.close()
+
+    def __enter__(self) -> "LSMTree":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
 
     # ------------------------------------------------------------------ #
     # geometry
     # ------------------------------------------------------------------ #
+    @property
+    def levels(self) -> List[List[SCT]]:
+        """Read-only view of the current version's per-level runs (kept
+        for reporting/tests; mutations go through ``VersionEdit``)."""
+        return [list(lvl) for lvl in self.versions.current.levels]
+
     @property
     def file_entries(self) -> int:
         rec = record_disk_bytes(self.cfg.codec, self.cfg.key_bytes, self.cfg.value_width)
         return max(256, int(self.cfg.file_bytes / rec))
 
     def level_bytes(self, i: int) -> int:
-        return sum(s.disk_bytes for s in self.levels[i])
+        return self.versions.current.level_bytes(i)
 
     def level_capacity(self, i: int) -> int:
         # L1 holds T files; each deeper level is T times larger (leveling).
@@ -120,17 +263,18 @@ class LSMTree:
     @property
     def dict_bytes(self) -> int:
         """Memory-resident OPD footprint (paper reports <1GB at NDV<=10%)."""
-        return sum(s.dict_nbytes for lvl in self.levels for s in lvl)
+        return sum(s.dict_nbytes for s in self.versions.current.all_runs())
 
     @property
     def n_files(self) -> int:
-        return sum(len(lvl) for lvl in self.levels)
+        return self.versions.current.n_files
 
     @property
     def disk_bytes(self) -> int:
-        total = sum(s.disk_bytes for lvl in self.levels for s in lvl)
+        total = sum(s.disk_bytes for s in self.versions.current.all_runs())
         if self.blob_mgr is not None:
-            total += sum(self.store.size_of(f) for f in self.blob_mgr.live
+            total += sum(self.store.size_of(f)
+                         for f in self.blob_mgr.live_fids()
                          if self.store.contains(f))
         return total
 
@@ -139,11 +283,7 @@ class LSMTree:
         ``newest_first=False``), then L1..Ln (sorted, non-overlapping).
         Read paths require the default: first-match-wins point lookups
         depend on newer L0 runs shadowing older ones."""
-        l0 = self.levels[0]
-        runs = list(l0) if newest_first else list(reversed(l0))
-        for lvl in self.levels[1:]:
-            runs.extend(lvl)
-        return runs
+        return self.versions.current.all_runs(newest_first)
 
     # ------------------------------------------------------------------ #
     # writes
@@ -152,7 +292,7 @@ class LSMTree:
         self._seqno += 1
         self.ingest_bytes += self.cfg.key_bytes + 8 + self.cfg.value_width
         self.memtable.put(key, value, self._seqno)
-        self._maybe_flush()
+        self._after_write()
 
     def put_batch(self, keys: np.ndarray, values: np.ndarray) -> None:
         """Bulk insertion path for benchmarks (amortizes Python overhead)."""
@@ -162,24 +302,77 @@ class LSMTree:
             self._seqno += 1
             self.memtable.put(int(k), bytes(v), self._seqno)
             if self.memtable.approx_bytes >= self.cfg.mem_bytes:
-                self.flush()
+                self._handle_full_memtable()
 
     def delete(self, key: int) -> None:
         self._seqno += 1
         self.ingest_bytes += self.cfg.key_bytes + 8
         self.memtable.delete(key, self._seqno)
-        self._maybe_flush()
+        self._after_write()
 
-    def _maybe_flush(self) -> None:
+    def _after_write(self) -> None:
         if self.memtable.approx_bytes >= self.cfg.mem_bytes:
-            self.flush()
+            self._handle_full_memtable()
+
+    def _handle_full_memtable(self) -> None:
+        if self._sched is None:
+            self._sync_flush()
+        else:
+            self._rotate_memtable()
+            self._sched.throttle(self)
+
+    def _rotate_memtable(self) -> bool:
+        """Swap the active memtable into the frozen queue (background
+        mode).  The frozen memtable stays readable until its SCTs land
+        in an installed version."""
+        with self._lock:
+            if self.memtable.n_versions == 0:
+                return False
+            self._immutables.insert(0, self.memtable)
+            self.memtable = MemTable(self.cfg.value_width, self.cfg.key_bytes)
+        if self._sched is not None:
+            self._sched.schedule_flush(self)
+        return True
 
     def flush(self) -> None:
-        """Freeze + OPD-encode + write to L0; compact if L0 over limit."""
-        if self.memtable.n_versions == 0:
+        """Sync mode: freeze + OPD-encode + write to L0 inline (compact
+        if L0 over limit — the legacy forced stall).  Background mode:
+        rotate the active memtable and return immediately; ``drain`` is
+        the completion barrier."""
+        if self._sched is None:
+            self._sync_flush()
+        else:
+            self._rotate_memtable()
+
+    def _sync_flush(self) -> None:
+        if self.memtable.n_versions == 0 and not self._immutables:
             return
-        frozen = self.memtable.freeze()
-        self.memtable = MemTable(self.cfg.value_width, self.cfg.key_bytes)
+        self._rotate_memtable()
+        while self._flush_oldest_immutable():
+            pass
+        if len(self.versions.current.levels[0]) > self.cfg.l0_limit:
+            # forced write stall: ingestion waits for L0 compaction
+            self.write_stalls += 1
+            t0 = time.perf_counter()
+            self._compact_l0()
+            self._cascade()
+            self.stall_seconds += time.perf_counter() - t0
+
+    def _pending_flushes(self) -> int:
+        return len(self._immutables)
+
+    def _flush_oldest_immutable(self) -> bool:
+        """Encode + install ONE frozen memtable (the oldest — L0 recency
+        order depends on oldest-first processing).  Runs inline in sync
+        mode and on the flush worker in background mode; the memtable is
+        removed from the readable queue only after its version installs,
+        so readers never observe a gap (worst case they see the same
+        rows twice, which the seqno merges dedup)."""
+        with self._lock:
+            if not self._immutables:
+                return False
+            imm = self._immutables[-1]
+        frozen = imm.freeze()
         fe = self.file_entries
         with self.flush_stats.time("encode"):
             new = []
@@ -195,23 +388,35 @@ class LSMTree:
                     store=self.store, blob_mgr=self.blob_mgr,
                 )
                 new.append(sct)
-        # newest first in L0
-        self.levels[0] = new[::-1] + self.levels[0]
+        last = int(frozen.seqnos.max()) if frozen.n else None
+        # adds listed oldest-chunk-first; Version.with_edit prepends the
+        # reversed list, reproducing the legacy ``new[::-1] + L0`` order
+        self.versions.apply(VersionEdit(adds=[(0, s) for s in new],
+                                        last_seqno=last))
+        with self._lock:
+            self._immutables.pop()
         self.n_flushes += 1
-        if len(self.levels[0]) > self.cfg.l0_limit:
-            # forced write stall: ingestion waits for L0 compaction
-            self.write_stalls += 1
-            t0 = time.perf_counter()
-            self._compact_l0()
-            self._cascade()
-            self.stall_seconds += time.perf_counter() - t0
+        return True
+
+    def drain(self) -> None:
+        """Barrier: wait for every queued flush and all compaction debt
+        (background mode; no-op in sync mode, where nothing is queued)."""
+        if self._sched is not None:
+            self._sched.drain([self])
 
     def compact(self) -> None:
         """Force a full maintenance pass: flush the memtable, fold L0
         into L1, and cascade any over-capacity levels.  The shard
         executor drives this across shards on its thread pool."""
         self.flush()
-        if self.levels[0]:
+        if self._sched is not None:
+            self._sched.drain([self])
+        self._force_compact_inline()
+
+    def _force_compact_inline(self) -> None:
+        """Fold L0 + cascade inline.  Background callers must drain
+        first so no worker job is concurrently compacting this tree."""
+        if self.versions.current.levels[0]:
             self._compact_l0()
         self._cascade()
 
@@ -219,35 +424,106 @@ class LSMTree:
     # compaction scheduling (leveling, paper Figure 2)
     # ------------------------------------------------------------------ #
     def _is_bottom(self, out_level: int) -> bool:
-        return all(len(self.levels[j]) == 0 for j in range(out_level + 1, self.cfg.max_levels))
+        v = self.versions.current
+        return all(len(v.levels[j]) == 0
+                   for j in range(out_level + 1, self.cfg.max_levels))
+
+    def _compaction_debt(self) -> float:
+        """Debt score driving the background scheduler: L0 run-count
+        overage past ``l0_limit`` (each point = one whole run every read
+        must consult) plus per-level bytes/capacity overage."""
+        v = self.versions.current
+        debt = float(max(0, len(v.levels[0]) - self.cfg.l0_limit))
+        for i in range(1, self.cfg.max_levels - 1):
+            if not v.levels[i]:
+                continue
+            over = v.level_bytes(i) / self.level_capacity(i) - 1.0
+            if over > 0.0:
+                debt += over
+        return debt
+
+    def _compact_one_step(self) -> bool:
+        """One highest-debt merge (background compaction worker).  L0
+        depth always wins (it taxes every read); otherwise the most
+        over-capacity level sheds one victim."""
+        v = self.versions.current
+        if len(v.levels[0]) > self.cfg.l0_limit:
+            self._compact_l0()
+            return True
+        best, best_over = None, 0.0
+        for i in range(1, self.cfg.max_levels - 1):
+            if not v.levels[i]:
+                continue
+            over = v.level_bytes(i) / self.level_capacity(i) - 1.0
+            if over > best_over:
+                best, best_over = i, over
+        if best is None:
+            return False
+        self._compact_level_step(best)
+        return True
+
+    def _throttle_level(self) -> int:
+        """Graduated writer backpressure (RocksDB slowdown/stop).  The
+        slowdown band opens at HALF the frozen-queue limit so the writer
+        is gently delayed well before the stop cliff — per-rotation
+        sleeps concede the GIL to the flush/compaction workers, which is
+        usually enough to never reach a hard stop."""
+        if self._sched is None:
+            return THROTTLE_NONE
+        n_l0 = len(self.versions.current.levels[0])
+        n_imm = len(self._immutables)
+        if n_l0 >= self.cfg.l0_stop_trigger or n_imm > self.cfg.max_immutables:
+            return THROTTLE_STOP
+        if n_l0 >= self.cfg.l0_slowdown_trigger \
+                or n_imm >= max(1, self.cfg.max_immutables // 2):
+            return THROTTLE_SLOWDOWN
+        return THROTTLE_NONE
 
     def _compact_l0(self) -> None:
-        inputs = list(self.levels[0])
+        v = self.versions.current
+        inputs = list(v.levels[0])
         if not inputs:
             return
         lo = min(s.min_key for s in inputs)
         hi = max(s.max_key for s in inputs)
-        overlaps = [s for s in self.levels[1] if s.overlaps(lo, hi)]
+        overlaps = [s for s in v.levels[1] if s.overlaps(lo, hi)]
         self._run_merge(inputs + overlaps, out_level=1,
                         drop_in=[(0, inputs), (1, overlaps)])
+
+    def _compact_level_step(self, i: int) -> None:
+        victim = self._pick_victim(i)
+        if victim is None:
+            return
+        overlaps = [s for s in self.versions.current.levels[i + 1]
+                    if s.overlaps(victim.min_key, victim.max_key)]
+        self._run_merge([victim] + overlaps, out_level=i + 1,
+                        drop_in=[(i, [victim]), (i + 1, overlaps)])
 
     def _cascade(self) -> None:
         for i in range(1, self.cfg.max_levels - 1):
             guard = 0
-            while self.level_bytes(i) > self.level_capacity(i) and self.levels[i]:
-                victim = self._pick_victim(i)
-                overlaps = [s for s in self.levels[i + 1]
-                            if s.overlaps(victim.min_key, victim.max_key)]
-                self._run_merge([victim] + overlaps, out_level=i + 1,
-                                drop_in=[(i, [victim]), (i + 1, overlaps)])
+            while (self.level_bytes(i) > self.level_capacity(i)
+                   and self.versions.current.levels[i]):
+                self._compact_level_step(i)
                 guard += 1
                 if guard > 64:
+                    # previously a silent break: now counted + warned so
+                    # benchmark runs can't quietly under-compact
+                    self.cascade_truncations += 1
+                    warnings.warn(
+                        f"cascade truncated at level {i} after {guard} "
+                        f"merges (level still {self.level_bytes(i)}B over "
+                        f"{self.level_capacity(i)}B capacity); tree may be "
+                        "under-compacted", RuntimeWarning, stacklevel=2)
                     break
 
-    def _pick_victim(self, level: int) -> SCT:
-        cur = self._cursors.get(level, 0) % len(self.levels[level])
+    def _pick_victim(self, level: int) -> Optional[SCT]:
+        runs = self.versions.current.levels[level]
+        if not runs:
+            return None
+        cur = self._cursors.get(level, 0) % len(runs)
         self._cursors[level] = cur + 1
-        return self.levels[level][cur]
+        return runs[cur]
 
     def _run_merge(self, inputs: List[SCT], out_level: int,
                    drop_in: List[Tuple[int, List[SCT]]]) -> None:
@@ -267,17 +543,22 @@ class LSMTree:
         self.dict_compares += res.dict_compares
         self.compaction_in_bytes += sum(s.disk_bytes for s in inputs)
         self.compaction_out_bytes += sum(s.disk_bytes for s in res.outputs)
-        for lvl, gone in drop_in:
-            ids = {s.file_id for s in gone}
-            self.levels[lvl] = [s for s in self.levels[lvl] if s.file_id not in ids]
+        edit = VersionEdit(
+            adds=[(out_level, s) for s in res.outputs],
+            drops=[(lvl, s.file_id) for lvl, gone in drop_in for s in gone],
+        )
+        self.versions.apply(edit)
+        # files leave the store only after the edit is durable: a crash
+        # in between leaves orphans (GC'd on restore), never dangling refs
+        for _, gone in drop_in:
             for s in gone:
                 self.store.delete(s.file_id)
-        merged = self.levels[out_level] + res.outputs
-        merged.sort(key=lambda s: s.min_key)
-        self.levels[out_level] = merged
         if self.blob_mgr is not None:
             self._gc_blobs()
 
+    # ------------------------------------------------------------------ #
+    # blob GC (copy-on-write)
+    # ------------------------------------------------------------------ #
     def _pinned_blob_fids(self) -> Set[int]:
         """Blob files addressable through a live snapshot.  Snapshots pin
         SCT objects directly (immutability), but blob *values* live in the
@@ -285,77 +566,129 @@ class LSMTree:
         or snapshot reads would dangle.  Dead weakrefs are pruned here, so
         a dropped snapshot releases its files at the next GC pass."""
         pinned: Set[int] = set()
-        alive = []
-        for ref in self._snapshots:
+        with self._lock:
+            snaps = list(self._snapshots)
+        for ref in snaps:
             snap = ref()
             if snap is None:
                 continue
-            alive.append(ref)
             for s in snap.runs:
                 if s.vfids is not None and s.n:
                     pinned.update(int(f) for f in np.unique(s.vfids)
                                   if f >= 0)
-        self._snapshots = alive
+        with self._lock:
+            # prune IN PLACE against the live list: a snapshot registered
+            # while we walked the copy above must not be dropped (its
+            # blob logs would become deletable while it still reads them)
+            self._snapshots = [r for r in self._snapshots
+                               if r() is not None]
         return pinned
 
     def _gc_blobs(self) -> None:
-        """Rewrite blob files past the garbage threshold (BlobDB GC).
-        Files pinned by a live snapshot are skipped — their garbage is
-        collected once the snapshot is released."""
+        """Rewrite blob files past the garbage threshold (BlobDB GC),
+        copy-on-write: runs whose pointers move are REBUILT and swapped
+        into the version via a replace edit — concurrent readers holding
+        the previous version keep a fully consistent view.  The replaced
+        log itself is unlinked one GC pass later (and only while no live
+        snapshot pins it), giving in-flight readers of the old version
+        time to finish.  Files pinned by a live snapshot are skipped
+        entirely — their garbage is collected once the snapshot goes."""
         pinned = self._pinned_blob_fids()
+        with self._lock:
+            zombies, self._zombie_blobs = self._zombie_blobs, []
+        survivors = []
+        for fid in zombies:
+            if fid in pinned:
+                survivors.append(fid)
+            else:
+                self.store.delete(fid)
+        with self._lock:
+            self._zombie_blobs.extend(survivors)
         for fid in self.blob_mgr.gc_candidates():
             if fid in pinned:
                 continue
+            v = self.versions.current
             refs = []
-            for lvl in self.levels:
+            for lvl_idx, lvl in enumerate(v.levels):
                 for s in lvl:
                     sel = np.nonzero(s.vfids == fid)[0]
                     if sel.shape[0]:
-                        refs.append((s, sel))
-            live_n = sum(sel.shape[0] for _, sel in refs)
+                        refs.append((lvl_idx, s, sel))
+            live_n = sum(sel.shape[0] for _, _, sel in refs)
             old_size = self.store.size_of(fid)
             self.store.stats.add_read(old_size, 1)
             if live_n == 0:
                 self.store.delete(fid)
-                self.blob_mgr.live.pop(fid, None)
-                self.blob_mgr.total.pop(fid, None)
+                self.blob_mgr.forget(fid)
                 continue
             _, payload, values = self.store.payload(fid)
-            parts = [values[s.vptrs[sel].astype(np.int64)] for s, sel in refs]
+            parts = [values[s.vptrs[sel].astype(np.int64)]
+                     for _, s, sel in refs]
             new_vals = np.concatenate(parts)
             new_fid, _ = self.blob_mgr.append(new_vals)
             off = 0
-            for s, sel in refs:
-                s.vfids[sel] = new_fid
-                s.vptrs[sel] = np.arange(off, off + sel.shape[0], dtype=np.uint64)
+            replaces = []
+            for lvl_idx, s, sel in refs:
+                vfids = s.vfids.copy()
+                vptrs = s.vptrs.copy()
+                vfids[sel] = new_fid
+                vptrs[sel] = np.arange(off, off + sel.shape[0],
+                                       dtype=np.uint64)
                 off += sel.shape[0]
-            self.store.delete(fid)
-            self.blob_mgr.live.pop(fid, None)
-            self.blob_mgr.total.pop(fid, None)
+                ns = dataclasses.replace(s, vfids=vfids, vptrs=vptrs)
+                ns.file_id = self.store.alloc_id()
+                self.store.write(ns, ns.disk_bytes, fid=ns.file_id)
+                replaces.append((lvl_idx, s.file_id, ns))
+            self.versions.apply(VersionEdit(replaces=replaces))
+            for _, s, _sel in refs:
+                self.store.delete(s.file_id)
+            self.blob_mgr.forget(fid)
+            with self._lock:
+                self._zombie_blobs.append(fid)
             self.blob_mgr.gc_runs += 1
             self.blob_mgr.gc_bytes_rewritten += int(new_vals.nbytes)
 
     # ------------------------------------------------------------------ #
     # reads
     # ------------------------------------------------------------------ #
+    def _read_state(self) -> Tuple[int, List[MemTable], Version]:
+        """Consistent (seqno, memtable stack, version) triple.  Memtables
+        are captured before the version under the tree lock: a flush
+        that lands in between shows its rows in BOTH (deduped by the
+        seqno merges), never in neither."""
+        with self._lock:
+            return (self._seqno,
+                    [self.memtable] + list(self._immutables),
+                    self.versions.current)
+
     def snapshot(self) -> Snapshot:
-        snap = Snapshot(self._seqno, self.memtable, self.all_runs())
+        seqno, mems, version = self._read_state()
+        snap = Snapshot(seqno, mems[0], version.all_runs(),
+                        memtables=mems, version=version)
         if self.blob_mgr is not None:
             # registry only feeds blob-GC pinning; prune dead refs on the
             # way in so read-heavy workloads never grow it unboundedly
-            self._snapshots = [r for r in self._snapshots if r() is not None]
-            self._snapshots.append(weakref.ref(snap))
+            with self._lock:
+                self._snapshots = [r for r in self._snapshots
+                                   if r() is not None]
+                self._snapshots.append(weakref.ref(snap))
         return snap
 
     def get(self, key: int, snapshot: Optional[Snapshot] = None) -> Optional[bytes]:
-        """point_lookup: memtable, then L0 newest->oldest, then L1..Ln."""
-        snap_seq = snapshot.seqno if snapshot else None
-        mem = snapshot.memtable if snapshot else self.memtable
+        """point_lookup: memtable stack, then L0 newest->oldest, then L1..Ln."""
+        if snapshot is not None:
+            snap_seq: Optional[int] = snapshot.seqno
+            mems = snapshot.mems
+            runs = snapshot.runs
+        else:
+            snap_seq = None
+            _, mems, version = self._read_state()
+            runs = version.all_runs()
         with self.lookup_stats.time("lookup"):
-            got = mem.get(key, snap_seq)
-            if got is not None:
-                return got[1]
-            runs = snapshot.runs if snapshot else self.all_runs()
+            for mem in mems:  # newest first; first hit decides
+                got = mem.get(key, snap_seq)
+                if got is not None:
+                    return got[1]
             k = np.uint64(key)
             for s in runs:
                 if s.n == 0 or not (s.min_key <= key <= s.max_key):
@@ -363,10 +696,13 @@ class LSMTree:
                 blk, maybe = s.blocks.probe(k)
                 if not maybe:
                     continue
+                # the block is fetched to search it: charge the read now,
+                # whether or not the key is present (bloom false
+                # positives are real I/O, not free)
+                self.store.stats.add_read(self.cfg.block_bytes, 1)
                 pos = int(np.searchsorted(s.keys, k, side="left"))
                 while pos < s.n and s.keys[pos] == k:
                     if snap_seq is None or s.seqnos[pos] <= snap_seq:
-                        self.store.stats.add_read(self.cfg.block_bytes, 1)
                         if s.tombs[pos]:
                             return None
                         return self._decode_one(s, pos)
@@ -392,7 +728,7 @@ class LSMTree:
                      snapshot: Optional[Snapshot] = None) -> Tuple[np.ndarray, np.ndarray]:
         snap = snapshot or self.snapshot()
         return range_scan(
-            snap.runs, snap.memtable, lo, hi,
+            snap.runs, snap.mems, lo, hi,
             stats=self.lookup_stats, store=self.store, blob_mgr=self.blob_mgr,
             snapshot_seqno=snap.seqno, block_bytes=self.cfg.block_bytes,
         )
@@ -401,7 +737,7 @@ class LSMTree:
                snapshot: Optional[Snapshot] = None) -> FilterResult:
         snap = snapshot or self.snapshot()
         return evaluate_filter(
-            snap.runs, snap.memtable, pred,
+            snap.runs, snap.mems, pred,
             stats=self.filter_stats, store=self.store, blob_mgr=self.blob_mgr,
             snapshot_seqno=snap.seqno, backend=self.cfg.filter_backend,
         )
@@ -413,7 +749,7 @@ class LSMTree:
         run), against a single consistent snapshot."""
         snap = snapshot or self.snapshot()
         return evaluate_filter_many(
-            snap.runs, snap.memtable, preds,
+            snap.runs, snap.mems, preds,
             stats=self.filter_stats, store=self.store, blob_mgr=self.blob_mgr,
             snapshot_seqno=snap.seqno, backend=self.cfg.filter_backend,
         )
@@ -433,14 +769,22 @@ class LSMTree:
         }
 
     def shape_report(self) -> Dict[str, object]:
+        v = self.versions.current
         return {
-            "levels": [len(l) for l in self.levels],
-            "level_bytes": [self.level_bytes(i) for i in range(self.cfg.max_levels)],
+            "levels": [len(l) for l in v.levels],
+            "level_bytes": [v.level_bytes(i) for i in range(self.cfg.max_levels)],
             "n_files": self.n_files,
             "disk_bytes": self.disk_bytes,
             "dict_bytes": self.dict_bytes,
             "n_flushes": self.n_flushes,
             "n_compactions": self.n_compactions,
             "write_stalls": self.write_stalls,
+            "stall_seconds": self.stall_seconds,
+            "write_slowdowns": self.write_slowdowns,
+            "slowdown_seconds": self.slowdown_seconds,
+            "cascade_truncations": self.cascade_truncations,
             "dict_compares": self.dict_compares,
+            "version": v.vid,
+            "n_immutables": len(self._immutables),
+            "maintenance": self.cfg.maintenance,
         }

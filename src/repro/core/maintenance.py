@@ -1,0 +1,220 @@
+"""Background maintenance pipeline: flush workers, a debt-scored
+compaction scheduler, and RocksDB-style graduated write throttling.
+
+One ``MaintenanceScheduler`` drives any number of trees (the sharded
+engine registers every shard with the same instance, sharing one
+``ShardExecutor`` thread pool).  Per tree there are at most two jobs in
+flight:
+
+  flush worker       drains the tree's immutable-memtable queue oldest
+                     first (L0 recency order depends on it), installing
+                     one ``VersionEdit`` per flushed memtable;
+  compaction worker  repeatedly runs the single highest-debt merge until
+                     the tree's debt score reaches zero.  Debt =
+                     L0-run-count overage past ``l0_limit`` (weighted —
+                     L0 depth hurts every read) plus per-level
+                     ``bytes/capacity`` overage.
+
+Jobs never block on other jobs, so any pool size is deadlock-free; the
+pool just sets how many trees make progress at once.
+
+Throttling (``throttle``) runs on the *writer's* thread and replaces the
+old hard stall: past ``l0_slowdown`` the writer is delayed by
+``slowdown_seconds`` per memtable rotation (graduated backpressure);
+past ``l0_stop`` — or when the frozen-memtable queue exceeds
+``max_immutables`` — the writer blocks until maintenance catches up.
+Both gates are surfaced in ``LSMTree.throttle_stats`` ('slowdown' /
+'stop' stages) and ``shape_report``.
+
+Worker exceptions are recorded and re-raised on the next ``drain`` or
+``throttle`` call on the writer thread — background failures never
+silently wedge the pipeline.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from typing import TYPE_CHECKING, List, Optional
+
+if TYPE_CHECKING:  # real import is deferred: shard package imports lsm
+    from repro.shard.executor import ShardExecutor
+
+THROTTLE_NONE = 0
+THROTTLE_SLOWDOWN = 1
+THROTTLE_STOP = 2
+
+
+class MaintenanceError(RuntimeError):
+    """A background flush/compaction job raised; carries the original."""
+
+
+class MaintenanceScheduler:
+    def __init__(self, executor: Optional["ShardExecutor"] = None,
+                 n_workers: int = 2):
+        self._owns_executor = executor is None
+        if executor is None:
+            from repro.shard.executor import ShardExecutor
+            executor = ShardExecutor(n_workers)
+        self.executor = executor
+        self._lock = threading.Lock()
+        self._cond = threading.Condition(self._lock)
+        self._flush_inflight: set = set()     # id(tree)
+        self._compact_inflight: set = set()   # id(tree)
+        self._trees: List[object] = []
+        self._errors: List[BaseException] = []
+        self.n_bg_flushes = 0
+        self.n_bg_compactions = 0
+
+    # ------------------------------------------------------------------ #
+    # registration
+    # ------------------------------------------------------------------ #
+    def register(self, tree) -> None:
+        with self._lock:
+            if all(t is not tree for t in self._trees):
+                self._trees.append(tree)
+
+    def unregister(self, tree) -> None:
+        with self._lock:
+            self._trees = [t for t in self._trees if t is not tree]
+
+    # ------------------------------------------------------------------ #
+    # scheduling
+    # ------------------------------------------------------------------ #
+    def schedule_flush(self, tree) -> None:
+        """Ensure a flush worker is (or will be) draining this tree's
+        immutable queue.  Idempotent: one worker per tree."""
+        with self._lock:
+            if id(tree) in self._flush_inflight:
+                return
+            self._flush_inflight.add(id(tree))
+        self.executor.submit(self._flush_worker, tree)
+
+    def schedule_compaction(self, tree) -> None:
+        if tree._compaction_debt() <= 0.0:
+            return
+        with self._lock:
+            if id(tree) in self._compact_inflight:
+                return
+            self._compact_inflight.add(id(tree))
+        self.executor.submit(self._compact_worker, tree)
+
+    def _flush_worker(self, tree) -> None:
+        try:
+            while tree._flush_oldest_immutable():
+                with self._lock:  # '+=' from pool threads loses updates
+                    self.n_bg_flushes += 1
+                    self._cond.notify_all()
+                self.schedule_compaction(tree)
+        except BaseException as e:  # propagate via drain/throttle
+            self._record_error(e)
+        finally:
+            with self._lock:
+                self._flush_inflight.discard(id(tree))
+                self._cond.notify_all()
+            # a rotation may have raced the queue-empty check: re-kick
+            if tree._pending_flushes():
+                self.schedule_flush(tree)
+
+    def _compact_worker(self, tree) -> None:
+        try:
+            while tree._compact_one_step():
+                with self._lock:
+                    self.n_bg_compactions += 1
+                    self._cond.notify_all()
+        except BaseException as e:
+            self._record_error(e)
+        finally:
+            with self._lock:
+                self._compact_inflight.discard(id(tree))
+                self._cond.notify_all()
+            if tree._compaction_debt() > 0.0:
+                self.schedule_compaction(tree)
+
+    def _record_error(self, e: BaseException) -> None:
+        with self._lock:
+            self._errors.append(e)
+            self._cond.notify_all()
+
+    def check_errors(self) -> None:
+        with self._lock:
+            errs, self._errors = self._errors, []
+        if errs:
+            raise MaintenanceError(
+                f"{len(errs)} background maintenance job(s) failed: "
+                f"{errs[0]!r}") from errs[0]
+
+    # ------------------------------------------------------------------ #
+    # writer-side throttle (graduated: none -> slowdown -> stop)
+    # ------------------------------------------------------------------ #
+    def throttle(self, tree) -> None:
+        """Called on the writer's thread after a write/rotation.  Fast
+        path is two int comparisons; the slow paths are accounted into
+        ``tree.throttle_stats`` and the legacy stall counters."""
+        level = tree._throttle_level()
+        if level == THROTTLE_NONE:
+            return
+        self.check_errors()
+        # make sure something is actually working the backlog down
+        self.schedule_flush(tree)
+        self.schedule_compaction(tree)
+        if level == THROTTLE_SLOWDOWN:
+            delay = tree.cfg.slowdown_seconds
+            tree.write_slowdowns += 1
+            tree.slowdown_seconds += delay
+            with tree.throttle_stats.time("slowdown"):
+                time.sleep(delay)
+            return
+        # THROTTLE_STOP: block until maintenance brings us under the gate
+        tree.write_stalls += 1
+        t0 = time.perf_counter()
+        with tree.throttle_stats.time("stop"):
+            with self._lock:
+                while tree._throttle_level() >= THROTTLE_STOP:
+                    if self._errors:
+                        break
+                    self._cond.wait(timeout=0.05)
+        tree.stall_seconds += time.perf_counter() - t0
+        self.check_errors()
+
+    # ------------------------------------------------------------------ #
+    # drain barrier
+    # ------------------------------------------------------------------ #
+    def drain(self, trees: Optional[List[object]] = None,
+              timeout: float = 120.0) -> None:
+        """Block until every tree has an empty immutable queue, zero
+        compaction debt, and no job in flight.  The differential tests'
+        sync-equivalence barrier."""
+        if trees is None:
+            with self._lock:
+                trees = list(self._trees)
+        deadline = time.perf_counter() + timeout
+        while True:
+            self.check_errors()
+            busy = False
+            for tree in trees:
+                if tree._pending_flushes():
+                    busy = True
+                    self.schedule_flush(tree)
+                if tree._compaction_debt() > 0.0:
+                    busy = True
+                    self.schedule_compaction(tree)
+            with self._lock:
+                inflight = bool(self._flush_inflight or
+                                self._compact_inflight)
+                if not busy and not inflight:
+                    break
+                self._cond.wait(timeout=0.05)
+            if time.perf_counter() > deadline:
+                raise TimeoutError("maintenance drain timed out")
+        self.check_errors()
+
+    def close(self) -> None:
+        if self._owns_executor:
+            self.executor.close()
+
+    def __enter__(self) -> "MaintenanceScheduler":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

@@ -10,16 +10,36 @@ host; sortedness is only materialized where the paper needs it.
 Version chains (newest first) implement the paper's lifetime-interval
 MVCC inside the buffer: a read at snapshot seqno s sees the newest
 version with seqno <= s.
+
+Thread safety: with background maintenance the *active* memtable is read
+by scan threads while the writer inserts, so mutation and the whole-table
+read helpers (``newest_rows``, ``range_items``, ``freeze``) serialize on
+a per-memtable lock.  Frozen (rotated-out) memtables have no writer; the
+lock is uncontended there.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterator, List, Optional, Tuple
+import threading
+from typing import Dict, Iterator, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
 TOMBSTONE = None  # value sentinel
+
+# scan paths accept the background engine's memtable *stack* (active +
+# frozen queue, newest first); a bare MemTable or None still works
+MemTables = Union[None, "MemTable", Sequence["MemTable"]]
+
+
+def as_mems(memtable: MemTables) -> List["MemTable"]:
+    """Normalize a ``MemTables`` argument to a (possibly empty) list."""
+    if memtable is None:
+        return []
+    if isinstance(memtable, MemTable):
+        return [memtable]
+    return list(memtable)
 
 
 @dataclasses.dataclass
@@ -42,6 +62,7 @@ class MemTable:
         self.key_bytes = key_bytes
         # key -> list[(seqno, value|None)] newest first
         self._chains: Dict[int, List[Tuple[int, Optional[bytes]]]] = {}
+        self._lock = threading.Lock()
         self.approx_bytes = 0
         self.n_versions = 0
         self.frozen = False
@@ -49,22 +70,49 @@ class MemTable:
     # ------------------------------------------------------------------ #
     def put(self, key: int, value: bytes, seqno: int) -> None:
         assert not self.frozen, "memtable is frozen"
-        chain = self._chains.setdefault(int(key), [])
-        chain.insert(0, (int(seqno), value))
-        self.approx_bytes += self.key_bytes + 8 + self.value_width
-        self.n_versions += 1
+        with self._lock:
+            chain = self._chains.setdefault(int(key), [])
+            chain.insert(0, (int(seqno), value))
+            self.approx_bytes += self.key_bytes + 8 + self.value_width
+            self.n_versions += 1
 
     def delete(self, key: int, seqno: int) -> None:
         assert not self.frozen, "memtable is frozen"
-        chain = self._chains.setdefault(int(key), [])
-        chain.insert(0, (int(seqno), TOMBSTONE))
-        self.approx_bytes += self.key_bytes + 8
-        self.n_versions += 1
+        with self._lock:
+            chain = self._chains.setdefault(int(key), [])
+            chain.insert(0, (int(seqno), TOMBSTONE))
+            self.approx_bytes += self.key_bytes + 8
+            self.n_versions += 1
 
     # ------------------------------------------------------------------ #
     def get(self, key: int, max_seqno: Optional[int] = None
             ) -> Optional[Tuple[int, Optional[bytes]]]:
         """Newest visible (seqno, value|None) or None if key unseen here."""
+        with self._lock:
+            chain = self._chains.get(int(key))
+            if not chain:
+                return None
+            if max_seqno is None:
+                return chain[0]
+            for seqno, value in chain:
+                if seqno <= max_seqno:
+                    return seqno, value
+        return None
+
+    def range_items(
+        self, lo: int, hi: int, max_seqno: Optional[int] = None
+    ) -> Iterator[Tuple[int, int, Optional[bytes]]]:
+        """Sorted (key, seqno, value) of newest visible versions in [lo, hi]."""
+        with self._lock:
+            rows = []
+            for key in sorted(k for k in self._chains if lo <= k <= hi):
+                got = self._get_locked(key, max_seqno)
+                if got is not None:
+                    rows.append((key, got[0], got[1]))
+        return iter(rows)
+
+    def _get_locked(self, key: int, max_seqno: Optional[int]
+                    ) -> Optional[Tuple[int, Optional[bytes]]]:
         chain = self._chains.get(int(key))
         if not chain:
             return None
@@ -75,14 +123,45 @@ class MemTable:
                 return seqno, value
         return None
 
-    def range_items(
-        self, lo: int, hi: int, max_seqno: Optional[int] = None
-    ) -> Iterator[Tuple[int, int, Optional[bytes]]]:
-        """Sorted (key, seqno, value) of newest visible versions in [lo, hi]."""
-        for key in sorted(k for k in self._chains if lo <= k <= hi):
-            got = self.get(key, max_seqno)
-            if got is not None:
-                yield key, got[0], got[1]
+    def newest_rows(
+        self, max_seqno: Optional[int] = None,
+        lo: Optional[int] = None, hi: Optional[int] = None,
+    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+        """Newest visible version per key as columnar arrays
+        ``(keys, seqnos, tombs, values)`` — tombstones INCLUDED (callers
+        shadowing older components need them; mask ``~tombs`` for live
+        rows).  One locked pass; scan paths call this once per memtable
+        per operation instead of reaching into ``_chains``."""
+        keys: List[int] = []
+        seqs: List[int] = []
+        tombs: List[bool] = []
+        vals: List[bytes] = []
+        with self._lock:
+            for key, chain in self._chains.items():
+                if lo is not None and key < lo:
+                    continue
+                if hi is not None and key > hi:
+                    continue
+                got = None
+                if max_seqno is None:
+                    got = chain[0]
+                else:
+                    for seqno, value in chain:
+                        if seqno <= max_seqno:
+                            got = (seqno, value)
+                            break
+                if got is None:
+                    continue
+                keys.append(key)
+                seqs.append(got[0])
+                tombs.append(got[1] is TOMBSTONE)
+                vals.append(b"" if got[1] is TOMBSTONE else got[1])
+        w = self.value_width
+        if not keys:
+            return (np.zeros(0, np.uint64), np.zeros(0, np.uint64),
+                    np.zeros(0, np.bool_), np.zeros(0, f"S{w}"))
+        return (np.asarray(keys, np.uint64), np.asarray(seqs, np.uint64),
+                np.asarray(tombs, np.bool_), np.asarray(vals, f"S{w}"))
 
     def items_all_versions(self) -> Iterator[Tuple[int, int, Optional[bytes]]]:
         for key in sorted(self._chains):
@@ -92,21 +171,22 @@ class MemTable:
     # ------------------------------------------------------------------ #
     def freeze(self) -> FrozenMemtable:
         """Freeze + columnarize.  Source domain is now fixed (paper §3)."""
-        self.frozen = True
-        n = self.n_versions
-        keys = np.empty(n, np.uint64)
-        seqnos = np.empty(n, np.uint64)
-        tombs = np.zeros(n, np.bool_)
-        values = np.zeros(n, dtype=f"S{self.value_width}")
-        i = 0
-        for key, seqno, value in self.items_all_versions():
-            keys[i] = key
-            seqnos[i] = seqno
-            if value is TOMBSTONE:
-                tombs[i] = True
-            else:
-                values[i] = value
-            i += 1
+        with self._lock:
+            self.frozen = True
+            n = self.n_versions
+            keys = np.empty(n, np.uint64)
+            seqnos = np.empty(n, np.uint64)
+            tombs = np.zeros(n, np.bool_)
+            values = np.zeros(n, dtype=f"S{self.value_width}")
+            i = 0
+            for key, seqno, value in self.items_all_versions():
+                keys[i] = key
+                seqnos[i] = seqno
+                if value is TOMBSTONE:
+                    tombs[i] = True
+                else:
+                    values[i] = value
+                i += 1
         # items_all_versions yields key asc / seqno desc already.
         return FrozenMemtable(keys, seqnos, tombs, values)
 

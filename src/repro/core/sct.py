@@ -25,6 +25,7 @@ in.
 from __future__ import annotations
 
 import dataclasses
+import threading
 import zlib
 from typing import Dict, List, Optional, Tuple
 
@@ -81,7 +82,13 @@ def bitunpack(words: np.ndarray, width: int, n: int) -> np.ndarray:
 # blob files (key-value separation competitor)
 # --------------------------------------------------------------------------- #
 class BlobManager:
-    """Append-only value logs with garbage-ratio GC (WiscKey/BlobDB model)."""
+    """Append-only value logs with garbage-ratio GC (WiscKey/BlobDB model).
+
+    Thread safety: with background maintenance the flush worker appends
+    new logs while the compaction worker iterates/mutates the liveness
+    tables (GC) and reporting threads read them — all table access goes
+    through ``_lock``.  Value *reads* need no lock (logs are immutable
+    once written; the store guards its own maps)."""
 
     def __init__(self, store: FileStore, value_width: int, compress: bool = False,
                  gc_threshold: float = 0.5):
@@ -91,6 +98,7 @@ class BlobManager:
         self.gc_threshold = gc_threshold
         self.live: Dict[int, int] = {}     # blob fid -> live value count
         self.total: Dict[int, int] = {}    # blob fid -> total value count
+        self._lock = threading.Lock()
         self.gc_runs = 0
         self.gc_bytes_rewritten = 0
 
@@ -105,8 +113,9 @@ class BlobManager:
             nbytes = int(values.nbytes)
             obj = ("raw", None, values.copy())
         fid = self.store.write(obj, nbytes)
-        self.live[fid] = n
-        self.total[fid] = n
+        with self._lock:
+            self.live[fid] = n
+            self.total[fid] = n
         return fid, np.arange(n, dtype=np.uint64)
 
     def read_values(self, fid: int, ptrs: np.ndarray, random_io: bool = True
@@ -127,15 +136,32 @@ class BlobManager:
         return values[ptrs.astype(np.int64)]
 
     def mark_dead(self, fid: int, count: int) -> None:
-        if fid in self.live:
-            self.live[fid] = max(0, self.live[fid] - int(count))
+        with self._lock:
+            if fid in self.live:
+                self.live[fid] = max(0, self.live[fid] - int(count))
+
+    def forget(self, fid: int) -> None:
+        """Drop a log from the liveness tables (GC rewrote or freed it)."""
+        with self._lock:
+            self.live.pop(fid, None)
+            self.total.pop(fid, None)
+
+    def live_fids(self) -> List[int]:
+        with self._lock:
+            return list(self.live)
 
     def garbage_ratio(self, fid: int) -> float:
+        with self._lock:
+            return self._garbage_ratio_locked(fid)
+
+    def _garbage_ratio_locked(self, fid: int) -> float:
         t = self.total.get(fid, 0)
         return 0.0 if t == 0 else 1.0 - self.live.get(fid, 0) / t
 
     def gc_candidates(self) -> List[int]:
-        return [f for f in self.live if self.garbage_ratio(f) > self.gc_threshold]
+        with self._lock:
+            return [f for f in self.live
+                    if self._garbage_ratio_locked(f) > self.gc_threshold]
 
 
 # --------------------------------------------------------------------------- #
@@ -354,7 +380,11 @@ def build_sct(
         raise ValueError(codec)
 
     sct.disk_bytes = int(disk)
-    sct.file_id = store.write(sct, sct.disk_bytes)
+    # allocate the id BEFORE the write: the store spills a pickle of the
+    # object at write time, and manifest recovery (core.version) must see
+    # the real file_id inside the restored SCT, not the -1 placeholder
+    sct.file_id = store.alloc_id()
+    store.write(sct, sct.disk_bytes, fid=sct.file_id)
     return sct
 
 

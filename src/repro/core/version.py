@@ -1,0 +1,255 @@
+"""Immutable version set: the engine's tree shape as a persistent value.
+
+Before this layer existed the engine mutated ``self.levels`` lists in
+place, which made every read racy against background maintenance and
+left the tree *shape* unrecoverable after a restart (``FileStore``
+spills bytes, not structure).  Following the LevelDB/RocksDB MANIFEST
+design:
+
+  ``Version``      a frozen per-level tuple-of-tuples of SCTs.  Readers
+                   grab ``VersionSet.current`` once and hold an immutable
+                   view for the whole operation — no locks on the read
+                   path, no torn level lists under concurrent flushes.
+  ``VersionEdit``  a delta: SCTs added per level, file-ids dropped per
+                   level, in-place replacements (copy-on-write blob GC),
+                   and the highest seqno the edit makes durable.
+  ``VersionSet``   applies edits atomically under a light mutex and
+                   appends each edit to a manifest log in the store's
+                   spill directory, so ``VersionSet.recover`` can replay
+                   the log over ``FileStore.restore`` and rebuild the
+                   exact tree shape a crashed process left behind.
+
+Level conventions (unchanged from the mutable engine): L0 runs are
+newest-first and may overlap; L1+ are single sorted runs kept sorted by
+``min_key``.  Edits preserve both invariants structurally: L0 adds
+prepend (in given order, first add ends up newest), deeper adds append
+and re-sort.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import threading
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.sct import SCT
+from repro.storage.io import FileStore
+
+
+@dataclasses.dataclass(frozen=True)
+class Version:
+    """One immutable tree shape.  Cheap to create (tuples of references),
+    safe to read from any thread, pinned by snapshots by reference."""
+
+    levels: Tuple[Tuple[SCT, ...], ...]
+    vid: int = 0
+
+    @staticmethod
+    def empty(max_levels: int) -> "Version":
+        return Version(tuple(() for _ in range(max_levels)), vid=0)
+
+    @property
+    def max_levels(self) -> int:
+        return len(self.levels)
+
+    def all_runs(self, newest_first: bool = True) -> List[SCT]:
+        """L0 (newest->oldest by default), then L1..Ln."""
+        l0 = self.levels[0]
+        runs = list(l0) if newest_first else list(reversed(l0))
+        for lvl in self.levels[1:]:
+            runs.extend(lvl)
+        return runs
+
+    def level_bytes(self, i: int) -> int:
+        return sum(s.disk_bytes for s in self.levels[i])
+
+    @property
+    def n_files(self) -> int:
+        return sum(len(lvl) for lvl in self.levels)
+
+    def file_ids(self) -> List[int]:
+        return [s.file_id for lvl in self.levels for s in lvl]
+
+    def with_edit(self, edit: "VersionEdit", vid: int) -> "Version":
+        """Apply one edit functionally; the receiver is untouched."""
+        levels: List[List[SCT]] = [list(lvl) for lvl in self.levels]
+        for lvl, old_fid, new_sct in edit.replaces:
+            levels[lvl] = [new_sct if s.file_id == old_fid else s
+                           for s in levels[lvl]]
+        for lvl, gone in _group_drops(edit.drops):
+            levels[lvl] = [s for s in levels[lvl] if s.file_id not in gone]
+        l0_adds = [s for lvl, s in edit.adds if lvl == 0]
+        if l0_adds:
+            # L0 adds prepend as ``reversed(adds)`` — with the flush path
+            # listing its chunks in build order this reproduces the
+            # legacy ``new[::-1] + levels[0]`` recency layout exactly
+            levels[0] = list(reversed(l0_adds)) + levels[0]
+        for lvl, s in edit.adds:
+            if lvl == 0:
+                continue
+            levels[lvl].append(s)
+        for i in range(1, len(levels)):
+            if any(lvl == i for lvl, _ in edit.adds):
+                levels[i].sort(key=lambda s: s.min_key)
+        return Version(tuple(tuple(lvl) for lvl in levels), vid=vid)
+
+
+def _group_drops(drops: List[Tuple[int, int]]) -> List[Tuple[int, set]]:
+    by_level: Dict[int, set] = {}
+    for lvl, fid in drops:
+        by_level.setdefault(lvl, set()).add(fid)
+    return list(by_level.items())
+
+
+@dataclasses.dataclass
+class VersionEdit:
+    """A delta between two versions.
+
+    ``adds``      (level, sct) — L0 adds prepend (reversed, matching the
+                  flush path's chunk order), deeper adds append + re-sort
+                  by min_key.
+    ``drops``     (level, file_id) — runs consumed by a compaction.
+    ``replaces``  (level, old_file_id, new_sct) — in-place swap that
+                  preserves position (copy-on-write blob GC must not
+                  perturb L0 recency order).
+    ``last_seqno``  highest seqno this edit makes durable (manifest
+                  replay restores the engine's seqno watermark from the
+                  running max).
+    """
+
+    adds: List[Tuple[int, SCT]] = dataclasses.field(default_factory=list)
+    drops: List[Tuple[int, int]] = dataclasses.field(default_factory=list)
+    replaces: List[Tuple[int, int, SCT]] = dataclasses.field(
+        default_factory=list)
+    last_seqno: Optional[int] = None
+
+    def record(self) -> Dict[str, object]:
+        rec: Dict[str, object] = {}
+        if self.adds:
+            rec["adds"] = [[lvl, s.file_id] for lvl, s in self.adds]
+        if self.drops:
+            rec["drops"] = [[lvl, fid] for lvl, fid in self.drops]
+        if self.replaces:
+            rec["replaces"] = [[lvl, old, s.file_id]
+                               for lvl, old, s in self.replaces]
+        if self.last_seqno is not None:
+            rec["seqno"] = int(self.last_seqno)
+        return rec
+
+
+class VersionSet:
+    """Atomic install point + manifest log.
+
+    ``apply`` is the ONLY way the tree shape changes: build the successor
+    version under the mutex, append the edit to the manifest (when the
+    store spills), then publish.  Publication is a single reference
+    assignment — readers that already hold ``current`` keep a consistent
+    older view (MVCC for free), new readers see the successor.
+    """
+
+    MANIFEST = "MANIFEST.log"
+
+    def __init__(self, store: FileStore, max_levels: int,
+                 manifest: Optional[str] = None):
+        self.store = store
+        self._lock = threading.Lock()
+        self.current = Version.empty(max_levels)
+        self.last_seqno = 0
+        self.manifest_name = manifest or self.MANIFEST
+        self._manifest_path = (
+            os.path.join(store.spill_dir, self.manifest_name)
+            if store.spill_dir else None)
+
+    # ------------------------------------------------------------------ #
+    def apply(self, edit: VersionEdit) -> Version:
+        """Install one edit atomically; returns the new current version.
+
+        Durability protocol (crash-safe with ``FileStore`` spilling):
+        callers write all added SCTs to the store BEFORE apply, and
+        delete dropped files only AFTER apply returns.  Replay then
+        never references a missing file, and files orphaned by a crash
+        between spill and log are garbage-collected on restore.
+        """
+        with self._lock:
+            if edit.last_seqno is not None:
+                self.last_seqno = max(self.last_seqno, int(edit.last_seqno))
+            new = self.current.with_edit(edit, vid=self.current.vid + 1)
+            if self._manifest_path is not None:
+                with open(self._manifest_path, "a") as f:
+                    f.write(json.dumps(edit.record()) + "\n")
+            self.current = new
+            return new
+
+    # ------------------------------------------------------------------ #
+    @classmethod
+    def recover(cls, store: FileStore, max_levels: int,
+                manifest: Optional[str] = None) -> "VersionSet":
+        """Replay the manifest over a restored store: rebuild the exact
+        tree shape (and seqno watermark) the logged edits describe."""
+        vs = cls(store, max_levels, manifest=manifest)
+        path = vs._manifest_path
+        if path is None or not os.path.exists(path):
+            return vs
+        # replay over file IDS only: an early add may reference a file a
+        # later drop deleted from disk — payloads resolve at the end, for
+        # the runs that actually survive the whole log
+        fid_levels: List[List[int]] = [[] for _ in range(max_levels)]
+        last_seqno = 0
+        vid = 0
+        with open(path) as f:
+            for line in f:
+                line = line.strip()
+                if not line:
+                    continue
+                rec = json.loads(line)
+                vid += 1
+                last_seqno = max(last_seqno, int(rec.get("seqno", 0)))
+                for lvl, old_fid, new_fid in rec.get("replaces", ()):
+                    fid_levels[lvl] = [new_fid if f == old_fid else f
+                                       for f in fid_levels[lvl]]
+                for lvl, fid in rec.get("drops", ()):
+                    fid_levels[lvl] = [f for f in fid_levels[lvl]
+                                       if f != fid]
+                adds = rec.get("adds", ())
+                l0 = [fid for lvl, fid in adds if lvl == 0]
+                if l0:
+                    fid_levels[0] = list(reversed(l0)) + fid_levels[0]
+                for lvl, fid in adds:
+                    if lvl != 0:
+                        fid_levels[lvl].append(fid)
+        levels: List[List[SCT]] = [
+            [store.payload(fid) for fid in lvl] for lvl in fid_levels]
+        for i in range(1, max_levels):
+            # append order during replay is arbitrary; L1+ runs are
+            # non-overlapping so a final min_key sort restores the layout
+            levels[i].sort(key=lambda s: s.min_key)
+        vs.current = Version(tuple(tuple(lvl) for lvl in levels), vid=vid)
+        vs.last_seqno = last_seqno
+        return vs
+
+    def gc_orphans(self) -> List[int]:
+        """Delete spilled SCT files not referenced by the current version
+        (outputs a crash stranded between spill and manifest append).
+        Only valid when this version set is the store's sole tree — a
+        shared store (sharded engine) must GC against the UNION of every
+        tree's version via ``gc_orphan_scts``."""
+        return gc_orphan_scts(self.store, [self.current])
+
+
+def gc_orphan_scts(store: FileStore, versions: List[Version]) -> List[int]:
+    """Delete SCT files referenced by none of ``versions`` (crash
+    leftovers).  Blob value logs are never SCTs and are left alone."""
+    live: set = set()
+    for v in versions:
+        live.update(v.file_ids())
+    orphans = []
+    for fid in list(store.fids()):
+        if fid in live:
+            continue
+        if isinstance(store.payload(fid), SCT):
+            orphans.append(fid)
+    for fid in orphans:
+        store.delete(fid)
+    return orphans

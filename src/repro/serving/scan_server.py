@@ -69,10 +69,25 @@ class ScanServerStats:
 
 
 class ScanServer:
-    def __init__(self, tree: ScanEngine, max_batch: int = 16):
+    def __init__(self, tree: ScanEngine, max_batch: int = 16,
+                 maintenance: str = "background"):
+        """``maintenance`` sets how batches relate to engine maintenance:
+
+        'background'  (default) batches pin whatever version is current;
+                      flushes/compactions overlap with serving — the
+                      steady-state production posture.
+        'sync'        every batch first drains pending maintenance
+                      (``tree.drain()``), so queries always observe a
+                      fully flushed + compacted tree — the
+                      deterministic posture differential tests and
+                      latency-floor benchmarks want.
+        """
         assert max_batch >= 1
+        if maintenance not in ("background", "sync"):
+            raise ValueError(f"unknown maintenance mode {maintenance!r}")
         self.tree = tree
         self.max_batch = max_batch
+        self.maintenance = maintenance
         self.queue: List[ScanRequest] = []
         self.stats = ScanServerStats()
         self._next_rid = 0
@@ -100,6 +115,8 @@ class ScanServer:
         as ONE batched filter against a single pinned snapshot."""
         if not self.queue:
             return {}
+        if self.maintenance == "sync" and hasattr(self.tree, "drain"):
+            self.tree.drain()  # observe a fully maintained tree
         slots = self.queue[: self.max_batch]
         now = time.perf_counter()
         # dequeue only after the batch succeeds: a failing filter_many

@@ -15,7 +15,7 @@ to a plain ``LSMTree`` (no pool, no reordering, no extra frames).
 from __future__ import annotations
 
 import os
-from concurrent.futures import ThreadPoolExecutor
+from concurrent.futures import Future, ThreadPoolExecutor
 from typing import Callable, List, Optional, Sequence, TypeVar
 
 T = TypeVar("T")
@@ -44,6 +44,13 @@ class ShardExecutor:
         if self.n_workers <= 1 or len(items) <= 1:
             return [fn(x) for x in items]
         return list(self._ensure_pool().map(fn, items))
+
+    def submit(self, fn: Callable[..., R], *args) -> "Future[R]":
+        """Fire-and-forget submission (the maintenance scheduler's flush
+        and compaction workers).  Always uses the real pool — background
+        jobs must be genuinely asynchronous even at ``n_workers=1``
+        (``map``'s inline degradation is a *synchronous* contract)."""
+        return self._ensure_pool().submit(fn, *args)
 
     def close(self) -> None:
         if self._pool is not None:

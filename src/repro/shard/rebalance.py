@@ -30,6 +30,7 @@ import numpy as np
 
 from repro.core.compaction import merge_scts
 from repro.core.lsm import LSMTree
+from repro.core.version import VersionEdit
 
 
 @dataclasses.dataclass(frozen=True)
@@ -76,7 +77,9 @@ class HotShardSplitter:
 # the split itself
 # --------------------------------------------------------------------------- #
 def split_shard(
-    tree: LSMTree, key_range: Tuple[int, int]
+    tree: LSMTree, key_range: Tuple[int, int],
+    manifests: Tuple[Optional[str], Optional[str]] = (None, None),
+    scheduler=None,
 ) -> Optional[Tuple[int, LSMTree, LSMTree]]:
     """Split ``tree`` (owner of half-open ``key_range``) at its key median.
 
@@ -86,9 +89,16 @@ def split_shard(
     tree's backing store; the old tree's SCT files are released from it
     (pinned snapshots keep reading their in-memory SCT objects — only
     blob value logs need the store, and those are retained).
+
+    ``manifests`` names the halves' fresh version logs (the sharded
+    engine allocates them so a shared spill dir stays collision-free);
+    ``scheduler`` attaches the halves to the caller's maintenance
+    scheduler in background mode.
     """
     lo, hi = key_range
     tree.flush()
+    tree.drain()  # background: the rotation above must land before we
+    #               enumerate runs (sync: no-op)
     runs = tree.all_runs()
     if not runs:
         return None
@@ -103,8 +113,9 @@ def split_shard(
     # it keeps the split a pure composition of the (heavily
     # differential-tested) merge path, and a split already amortizes as
     # a major compaction of the hot shard.
-    for a, b in ((lo, pivot), (pivot, hi)):
-        half = LSMTree(tree.cfg, store=tree.store)
+    for (a, b), manifest in zip(((lo, pivot), (pivot, hi)), manifests):
+        half = LSMTree(tree.cfg, store=tree.store, manifest=manifest,
+                       scheduler=scheduler)
         half._seqno = tree._seqno  # new writes stay newer than kept rows
         out_level = _fitting_level(tree, est_half)
         res = merge_scts(
@@ -120,7 +131,11 @@ def split_shard(
             backend=tree.cfg.compaction_backend,
             key_range=(a, b),
         )
-        half.levels[out_level] = sorted(res.outputs, key=lambda s: s.min_key)
+        # install through the version set so the half's manifest records
+        # its initial shape (restart recovers split shards too)
+        half.versions.apply(VersionEdit(
+            adds=[(out_level, s) for s in res.outputs],
+            last_seqno=tree._seqno))
         half.n_compactions += 1
         half.dict_compares += res.dict_compares
         half.compaction_in_bytes += sum(s.disk_bytes for s in runs)

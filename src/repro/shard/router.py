@@ -40,6 +40,19 @@ class ShardRouter:
         self._uppers: List[int] = uppers
         self._search = np.asarray(uppers[:-1], np.uint64)
 
+    @classmethod
+    def from_uppers(cls, uppers: List[int], key_max: int = KEY_MAX
+                    ) -> "ShardRouter":
+        """Rebuild a router from a persisted boundary table (the sharded
+        engine's restart path; ``uppers[-1]`` must equal ``key_max``)."""
+        if not uppers or uppers[-1] != key_max:
+            raise ValueError(f"boundary table {uppers} does not cover "
+                             f"[0, {key_max})")
+        r = cls(1, key_max)
+        r._uppers = [int(u) for u in uppers]
+        r._search = np.asarray(r._uppers[:-1], np.uint64)
+        return r
+
     # ------------------------------------------------------------------ #
     @property
     def n_shards(self) -> int:

@@ -24,6 +24,7 @@ value logs) stay readable because the snapshot holds them directly.
 from __future__ import annotations
 
 import dataclasses
+import json
 import os
 from typing import Dict, List, Optional, Tuple
 
@@ -31,6 +32,7 @@ import numpy as np
 
 from repro.core.filter_exec import FilterResult
 from repro.core.lsm import LSMConfig, LSMTree, Snapshot
+from repro.core.maintenance import MaintenanceScheduler
 from repro.core.opd import Predicate
 from repro.core.stats import StageStats
 from repro.shard.executor import ShardExecutor
@@ -41,9 +43,13 @@ from repro.storage.devices import DeviceModel
 from repro.storage.io import FileStore
 
 _STAGE_STATS = ("filter_stats", "compaction_stats", "flush_stats",
-                "lookup_stats")
-_COUNTERS = ("n_flushes", "n_compactions", "write_stalls", "dict_compares",
-             "compaction_in_bytes", "compaction_out_bytes", "ingest_bytes")
+                "lookup_stats", "throttle_stats")
+_COUNTERS = ("n_flushes", "n_compactions", "write_stalls", "stall_seconds",
+             "write_slowdowns", "slowdown_seconds", "cascade_truncations",
+             "dict_compares", "compaction_in_bytes", "compaction_out_bytes",
+             "ingest_bytes")
+
+_SHARDS_JSON = "SHARDS.json"  # router boundaries + per-shard manifest names
 
 
 @dataclasses.dataclass
@@ -93,16 +99,27 @@ class ShardedLSM:
         dominated by GIL-releasing work (zlib: 'heavy', compressed
         'blob'); plain-dict memtable inserts are GIL-bound, so threading
         them is pure overhead.  Flush/compaction maintenance is always
-        shard-parallel via ``compact_all``."""
+        shard-parallel via ``compact_all``; with
+        ``cfg.maintenance='background'`` ONE ``MaintenanceScheduler``
+        (sharing this engine's thread pool) drives every shard's flush
+        queue and compaction debt, so scans overlap with maintenance
+        across the whole engine."""
         self.cfg = cfg
         self.store = FileStore(spill_dir)
         self.router = ShardRouter(n_shards, key_max)
-        self.shards: List[LSMTree] = [
-            LSMTree(cfg, store=self.store) for _ in range(n_shards)
-        ]
         if n_workers is None:  # oversubscribing cores only adds GIL churn
             n_workers = min(n_shards, os.cpu_count() or 1)
         self.executor = ShardExecutor(n_workers)
+        self.scheduler: Optional[MaintenanceScheduler] = (
+            MaintenanceScheduler(executor=self.executor)
+            if cfg.maintenance == "background" else None)
+        self._manifest_seq = 0
+        self.shards: List[LSMTree] = [
+            LSMTree(cfg, store=self.store, scheduler=self.scheduler,
+                    manifest=self._next_manifest())
+            for _ in range(n_shards)
+        ]
+        self._persist_shard_table()
         self.scan_parallel_min = int(scan_parallel_min)
         if parallel_ingest is None:
             parallel_ingest = cfg.codec == "heavy" or (
@@ -117,6 +134,68 @@ class ShardedLSM:
         self._retired_stages: Dict[str, StageStats] = {
             name: StageStats() for name in _STAGE_STATS}
         self._retired_counts: Dict[str, int] = {c: 0 for c in _COUNTERS}
+
+    # ------------------------------------------------------------------ #
+    # manifests + restart
+    # ------------------------------------------------------------------ #
+    def _next_manifest(self) -> Optional[str]:
+        """Distinct per-shard manifest names: all shard trees share one
+        spill dir, so each needs its own version log."""
+        if not self.store.spill_dir:
+            return None
+        name = f"MANIFEST-{self._manifest_seq:04d}.log"
+        self._manifest_seq += 1
+        return name
+
+    def _persist_shard_table(self) -> None:
+        """Persist the router boundaries + shard->manifest mapping; with
+        the per-shard manifests this makes the whole sharded tree shape
+        recoverable (``ShardedLSM.restore``)."""
+        if not self.store.spill_dir:
+            return
+        table = {
+            "key_max": self.router.key_max,
+            "uppers": self.router.uppers,
+            "manifests": [t.versions.manifest_name for t in self.shards],
+            "next_manifest": self._manifest_seq,
+        }
+        path = os.path.join(self.store.spill_dir, _SHARDS_JSON)
+        with open(path + ".tmp", "w") as f:
+            json.dump(table, f)
+        os.replace(path + ".tmp", path)
+
+    @classmethod
+    def restore(cls, cfg: LSMConfig, spill_dir: str, **kw) -> "ShardedLSM":
+        """Rebuild a sharded engine after a crash/restart: one
+        ``FileStore.restore`` for the shared bytes, the shard table for
+        the router boundaries, and one manifest replay per shard tree.
+        Unflushed memtable contents are lost (no WAL)."""
+        store = FileStore.restore(spill_dir)
+        path = os.path.join(spill_dir, _SHARDS_JSON)
+        with open(path) as f:
+            table = json.load(f)
+        # size the pool for the RESTORED shard count, not the 1-shard
+        # placeholder (n_shards=1 would pin the executor to one worker)
+        kw.setdefault("n_workers",
+                      min(len(table["manifests"]), os.cpu_count() or 1))
+        eng = cls(cfg, n_shards=1, key_max=int(table["key_max"]),
+                  spill_dir=None, **kw)
+        eng.store = store
+        eng.router = ShardRouter.from_uppers(table["uppers"],
+                                             int(table["key_max"]))
+        eng._manifest_seq = int(table["next_manifest"])
+        if eng.scheduler is not None:  # drop the placeholder shard
+            for t in eng.shards:
+                eng.scheduler.unregister(t)
+        eng.shards = [
+            LSMTree.restore(cfg, spill_dir, manifest=name, store=store,
+                            scheduler=eng.scheduler, gc_orphans=False)
+            for name in table["manifests"]
+        ]
+        from repro.core.version import gc_orphan_scts
+        gc_orphan_scts(store, [t.versions.current for t in eng.shards])
+        eng._persist_shard_table()
+        return eng
 
     # ------------------------------------------------------------------ #
     # geometry
@@ -193,12 +272,29 @@ class ShardedLSM:
         self._maybe_rebalance()
 
     def flush(self) -> None:
+        # background: per-shard flush() is just a rotation + schedule, so
+        # the map is cheap; sync: the legacy inline flush fan-out
         self.executor.map(lambda t: t.flush(), self.shards)
+
+    def drain(self) -> None:
+        """Barrier: wait until every shard's flush queue is empty and all
+        compaction debt is paid (no-op in sync mode)."""
+        if self.scheduler is not None:
+            self.scheduler.drain(self.shards)
 
     def compact_all(self) -> None:
         """Shard-parallel maintenance: every shard flushes + compacts on
-        the thread pool (numpy/zlib release the GIL in the hot stages)."""
-        self.executor.map(lambda t: t.compact(), self.shards)
+        the thread pool (numpy/zlib release the GIL in the hot stages).
+
+        Background mode sequences rotate -> drain -> inline force-fold:
+        per-shard ``compact()`` would drain from inside a pool thread and
+        could starve the very workers it waits on."""
+        if self.scheduler is None:
+            self.executor.map(lambda t: t.compact(), self.shards)
+            return
+        self.flush()
+        self.scheduler.drain(self.shards)
+        self.executor.map(lambda t: t._force_compact_inline(), self.shards)
 
     # ------------------------------------------------------------------ #
     # rebalancing (hot-shard splits)
@@ -224,7 +320,14 @@ class ShardedLSM:
             if i is None:
                 return
             old = self.shards[i]
-            got = split_shard(old, self.router.bounds(i))
+            if self.scheduler is not None:
+                # quiesce the shard first: a split rebuilds from a fixed
+                # run set, so no background job may mutate it mid-rebuild
+                old.drain()
+            got = split_shard(old, self.router.bounds(i),
+                              manifests=(self._next_manifest(),
+                                         self._next_manifest()),
+                              scheduler=self.scheduler)
             if got is None:
                 self._splitter.defer(old)  # unsplittable: back off
                 continue
@@ -233,6 +336,7 @@ class ShardedLSM:
             self.shards[i:i + 1] = [left, right]
             self._retire(old)
             self.n_splits += 1
+            self._persist_shard_table()
 
     def _retire(self, tree: LSMTree) -> None:
         for name in _STAGE_STATS:
@@ -240,6 +344,8 @@ class ShardedLSM:
                 self._retired_stages[name].merged(getattr(tree, name)))
         for c in _COUNTERS:
             self._retired_counts[c] += getattr(tree, c)
+        if self.scheduler is not None:
+            self.scheduler.unregister(tree)
 
     # ------------------------------------------------------------------ #
     # reads (scatter-gather against a pinned snapshot vector)

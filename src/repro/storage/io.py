@@ -125,14 +125,18 @@ class FileStore:
 
     def read(self, fid: int, nbytes: Optional[int] = None) -> Any:
         """Full-file read (the paper's bulk-read path for long scans)."""
-        n = self._sizes[fid] if nbytes is None else int(nbytes)
+        with self._lock:  # atomic vs. a concurrent delete
+            n = self._sizes[fid] if nbytes is None else int(nbytes)
+            obj = self._objects[fid]
         self.stats.add_read(n)
-        return self._objects[fid]
+        return obj
 
     def read_partial(self, fid: int, nbytes: int, n_ios: int = 1) -> Any:
         """Block-granular read (point lookup path): charge only the blocks."""
+        with self._lock:
+            obj = self._objects[fid]
         self.stats.add_read(nbytes, n_ios)
-        return self._objects[fid]
+        return obj
 
     def delete(self, fid: int) -> None:
         with self._lock:
@@ -146,20 +150,31 @@ class FileStore:
     def contains(self, fid: int) -> bool:
         """Whether ``fid`` is live in the store (public: callers must not
         reach into ``_sizes``/``_objects``)."""
-        return fid in self._sizes
+        with self._lock:
+            return fid in self._sizes
 
     def payload(self, fid: int) -> Any:
         """The stored object, with NO I/O charged — for callers that do
         their own accounting (blob value reads, GC rewrites)."""
-        return self._objects[fid]
+        with self._lock:
+            return self._objects[fid]
 
     def size_of(self, fid: int) -> int:
-        return self._sizes[fid]
+        with self._lock:
+            return self._sizes[fid]
+
+    def fids(self) -> list:
+        """Live file ids, snapshotted under the lock (manifest recovery
+        scans these for orphaned SCT files)."""
+        with self._lock:
+            return list(self._objects.keys())
 
     @property
     def total_bytes(self) -> int:
-        return sum(self._sizes.values())
+        with self._lock:
+            return sum(self._sizes.values())
 
     @property
     def n_files(self) -> int:
-        return len(self._objects)
+        with self._lock:
+            return len(self._objects)

@@ -1,0 +1,155 @@
+"""Version-set unit contract: functional edits, L0 recency order,
+in-place replaces, manifest replay, and orphan GC."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import LSMConfig, LSMTree
+from repro.core.sct import build_sct
+from repro.core.version import (Version, VersionEdit, VersionSet,
+                                gc_orphan_scts)
+from repro.storage.io import FileStore
+
+VW = 16
+
+
+def _sct(store, keys, level=0):
+    keys = np.asarray(sorted(keys), np.uint64)
+    n = keys.shape[0]
+    return build_sct(
+        keys=keys, seqnos=np.arange(1, n + 1, dtype=np.uint64),
+        tombs=np.zeros(n, np.bool_),
+        raw_values=np.asarray([b"v%02d" % (int(k) % 97) for k in keys],
+                              f"S{VW}"),
+        level=level, codec="opd", key_bytes=8, value_width=VW,
+        block_bytes=512, bloom_bits_per_key=8, store=store)
+
+
+def test_with_edit_is_functional_and_preserves_l0_order():
+    store = FileStore()
+    vs = VersionSet(store, max_levels=3)
+    a, b, c = (_sct(store, [1, 5]), _sct(store, [2, 6]), _sct(store, [3, 7]))
+    v1 = vs.apply(VersionEdit(adds=[(0, a)]))
+    v2 = vs.apply(VersionEdit(adds=[(0, b), (0, c)]))
+    # reversed-prepend: matches the legacy ``new[::-1] + L0`` flush layout
+    assert [s.file_id for s in v2.levels[0]] == [c.file_id, b.file_id,
+                                                 a.file_id]
+    # v1 is untouched (readers holding it keep a consistent view)
+    assert [s.file_id for s in v1.levels[0]] == [a.file_id]
+    assert v2.vid == v1.vid + 1
+
+
+def test_edit_drops_and_deeper_level_sorting():
+    store = FileStore()
+    vs = VersionSet(store, max_levels=3)
+    lo = _sct(store, [10, 20], level=1)
+    hi = _sct(store, [30, 40], level=1)
+    vs.apply(VersionEdit(adds=[(1, hi)]))
+    v = vs.apply(VersionEdit(adds=[(1, lo)]))
+    assert [s.min_key for s in v.levels[1]] == [10, 30]  # min_key sorted
+    v = vs.apply(VersionEdit(drops=[(1, hi.file_id)]))
+    assert [s.file_id for s in v.levels[1]] == [lo.file_id]
+
+
+def test_replace_preserves_position():
+    store = FileStore()
+    vs = VersionSet(store, max_levels=2)
+    a, b, c = (_sct(store, [1]), _sct(store, [2]), _sct(store, [3]))
+    vs.apply(VersionEdit(adds=[(0, a), (0, b), (0, c)]))
+    b2 = _sct(store, [2])
+    v = vs.apply(VersionEdit(replaces=[(0, b.file_id, b2)]))
+    # copy-on-write swap keeps the slot (L0 recency must not move)
+    assert [s.file_id for s in v.levels[0]] == \
+        [c.file_id, b2.file_id, a.file_id]
+
+
+def test_manifest_replay_round_trip(tmp_path):
+    spill = str(tmp_path / "spill")
+    store = FileStore(spill)
+    vs = VersionSet(store, max_levels=3)
+    a = _sct(store, [1, 5])
+    b = _sct(store, [2, 6])
+    merged = _sct(store, [1, 2, 5, 6], level=1)
+    vs.apply(VersionEdit(adds=[(0, a)], last_seqno=2))
+    vs.apply(VersionEdit(adds=[(0, b)], last_seqno=4))
+    vs.apply(VersionEdit(adds=[(1, merged)],
+                         drops=[(0, a.file_id), (0, b.file_id)],
+                         last_seqno=4))
+    store.delete(a.file_id)
+    store.delete(b.file_id)
+
+    back = VersionSet.recover(FileStore.restore(spill), max_levels=3)
+    assert back.last_seqno == 4
+    assert [s.file_id for s in back.current.levels[0]] == []
+    assert [s.file_id for s in back.current.levels[1]] == [merged.file_id]
+    got = back.current.levels[1][0]
+    assert np.array_equal(got.keys, merged.keys)
+    assert got.file_id == merged.file_id  # spilled pickle carries the id
+
+
+def test_manifest_replay_tolerates_dropped_files(tmp_path):
+    """An early add may reference a file a later drop deleted from disk;
+    replay must resolve payloads only for the survivors."""
+    spill = str(tmp_path / "spill")
+    store = FileStore(spill)
+    vs = VersionSet(store, max_levels=2)
+    a = _sct(store, [1])
+    vs.apply(VersionEdit(adds=[(0, a)]))
+    vs.apply(VersionEdit(drops=[(0, a.file_id)]))
+    store.delete(a.file_id)  # gone from disk, still named in line 1
+    back = VersionSet.recover(FileStore.restore(spill), max_levels=2)
+    assert back.current.n_files == 0
+
+
+def test_gc_orphans_single_and_union(tmp_path):
+    spill = str(tmp_path / "spill")
+    store = FileStore(spill)
+    vs = VersionSet(store, max_levels=2)
+    live = _sct(store, [1])
+    orphan = _sct(store, [9])        # spilled but never logged (crash)
+    blob_like = store.write(("raw", None, np.zeros(3, f"S{VW}")), 48)
+    vs.apply(VersionEdit(adds=[(0, live)]))
+    gone = vs.gc_orphans()
+    assert gone == [orphan.file_id]
+    assert store.contains(live.file_id)
+    assert store.contains(blob_like)  # non-SCT payloads are never GC'd
+
+    # union form: a second tree's live file is NOT an orphan
+    other = _sct(store, [4])
+    v_other = Version((  (other,), ()  ))
+    assert gc_orphan_scts(store, [vs.current, v_other]) == []
+    assert store.contains(other.file_id)
+
+
+def test_tree_level_mutation_goes_through_edits():
+    """``LSMTree.levels`` is a view: mutating it must not change the
+    engine (regression guard for the mutable-list era)."""
+    t = LSMTree(LSMConfig(codec="opd", value_width=VW,
+                          file_bytes=8 * 1024, l0_limit=2, size_ratio=2,
+                          max_levels=4))
+    for k in range(500):
+        t.put(k, b"v%02d" % (k % 50))
+    t.flush()
+    view = t.levels
+    view[0].clear()
+    assert t.n_files > 0
+    assert len(t.levels[0]) == len(t.versions.current.levels[0])
+
+
+def test_manifest_records_are_json_lines(tmp_path):
+    spill = str(tmp_path / "s")
+    t = LSMTree(LSMConfig(codec="opd", value_width=VW, file_bytes=8 * 1024,
+                          l0_limit=2, size_ratio=2, max_levels=4),
+                spill_dir=spill)
+    for k in range(2000):
+        t.put(k % 700, b"v%02d" % (k % 50))
+    t.flush()
+    path = os.path.join(spill, t.versions.manifest_name)
+    with open(path) as f:
+        recs = [json.loads(line) for line in f if line.strip()]
+    assert len(recs) == t.versions.current.vid
+    assert any("adds" in r for r in recs)
+    assert any("drops" in r for r in recs)  # compactions happened
