@@ -16,13 +16,23 @@ After both modes finish, the filter result over the drained background
 tree is asserted bit-identical to the sync tree — the benchmark doubles
 as an in-process differential check, like bench_shard's smoke contract.
 
+WAL sweep (docs/EXPERIMENTS.md §bench-wal): ``--wal group|every|all``
+re-runs the same ingest with the write-ahead log on, measuring the
+durability tax.  'every' fsyncs per record (each op pays a syscall +
+flush); 'group' fsyncs once per ``wal_group_bytes`` so the cost
+amortizes over the batch.  For fairness every leg of a sweep — the
+'off' baseline included — runs against a real spill directory, so the
+comparison isolates the WAL itself, not memory-vs-disk spilling.
+
     PYTHONPATH=src:. python benchmarks/bench_maintenance.py [--n N]
-        [--codec opd|plain|heavy|blob|all] [--smoke]
+        [--codec opd|plain|heavy|blob|all] [--wal off|group|every|all]
+        [--smoke]
 """
 
 from __future__ import annotations
 
 import argparse
+import tempfile
 import time
 from typing import Dict, List
 
@@ -32,11 +42,14 @@ from benchmarks._harness import BenchRow, gen_keys, gen_values, pct
 from repro.core import LSMConfig, LSMTree, Predicate
 
 CODECS = ("opd", "plain", "heavy", "blob")
+WAL_MODES = ("off", "group", "every")
 
 
-def _cfg(codec: str, mode: str, file_bytes: int) -> LSMConfig:
+def _cfg(codec: str, mode: str, file_bytes: int,
+         wal: str = "off") -> LSMConfig:
     return LSMConfig(codec=codec, value_width=32, file_bytes=file_bytes,
-                     l0_limit=4, size_ratio=8, maintenance=mode)
+                     l0_limit=4, size_ratio=8, maintenance=mode,
+                     wal_sync=wal)
 
 
 CHUNK = 250  # ops per timed ingest chunk (one client "request")
@@ -59,54 +72,74 @@ def _ingest(tree: LSMTree, keys: np.ndarray, vals: np.ndarray
     return lats
 
 
-def run_one(codec: str, n: int, file_bytes: int = 256 * 1024
-            ) -> List[BenchRow]:
+def run_one(codec: str, n: int, file_bytes: int = 256 * 1024,
+            wal_modes=("off",)) -> List[BenchRow]:
     keys = gen_keys(n, seed=11)
     vals = gen_values(n, 32, ndv_ratio=0.01, seed=12)
     pred = Predicate("prefix", b"cat_00")
     rows = []
-    results: Dict[str, object] = {}
-    shapes: Dict[str, Dict] = {}
-    for mode in ("sync", "background"):
-        tree = LSMTree(_cfg(codec, mode, file_bytes))
-        t0 = time.perf_counter()
-        lats = _ingest(tree, keys, vals)
-        ingest_wall = time.perf_counter() - t0
-        tree.flush()
-        tree.drain()
-        wall = time.perf_counter() - t0
-        res = tree.filter(pred)
-        results[mode] = res
-        shapes[mode] = tree.shape_report()
-        us = [x * 1e6 for x in lats]  # µs/op, one sample per chunk
-        rows.append(BenchRow(
-            f"maintenance/{codec}/{mode}",
-            float(np.mean(us)),
-            {
+    results: Dict[tuple, object] = {}
+    # a WAL sweep puts EVERY leg (the 'off' baseline too) on a real
+    # spill dir, so wal-off vs wal-group isolates the log, not
+    # memory-vs-disk spilling; the legacy wal-less invocation keeps the
+    # in-memory store and its unsuffixed row names
+    sweep = tuple(wal_modes) != ("off",)
+    for wal in wal_modes:
+        for mode in ("sync", "background"):
+            tmp = (tempfile.TemporaryDirectory(prefix="bench-wal-")
+                   if sweep else None)
+            tree = LSMTree(_cfg(codec, mode, file_bytes, wal),
+                           spill_dir=tmp.name if tmp else None)
+            t0 = time.perf_counter()
+            lats = _ingest(tree, keys, vals)
+            ingest_wall = time.perf_counter() - t0
+            tree.flush()
+            tree.drain()
+            wall = time.perf_counter() - t0
+            res = tree.filter(pred)
+            results[(wal, mode)] = res
+            shape = tree.shape_report()
+            us = [x * 1e6 for x in lats]  # µs/op, one sample per chunk
+            extras = {
                 "p50_us": pct(us, 50), "p99_us": pct(us, 99),
                 "max_us": pct(us, 100),
                 "ingest_wall_s": ingest_wall, "wall_s": wall,
-                "stall_s": shapes[mode]["stall_seconds"],
-                "slowdown_s": shapes[mode]["slowdown_seconds"],
-                "write_stalls": shapes[mode]["write_stalls"],
-                "write_slowdowns": shapes[mode]["write_slowdowns"],
-                "n_compactions": shapes[mode]["n_compactions"],
-                "n_files": shapes[mode]["n_files"],
-            },
-        ))
-        tree.close()
-    rs, rb = results["sync"], results["background"]
-    assert rs.keys.tolist() == rb.keys.tolist(), (
-        f"{codec}: background filter keys diverge from sync")
-    assert rs.values.tolist() == rb.values.tolist(), (
-        f"{codec}: background filter values diverge from sync")
+                "stall_s": shape["stall_seconds"],
+                "slowdown_s": shape["slowdown_seconds"],
+                "write_stalls": shape["write_stalls"],
+                "write_slowdowns": shape["write_slowdowns"],
+                "n_compactions": shape["n_compactions"],
+                "n_files": shape["n_files"],
+            }
+            if sweep:
+                extras.update(
+                    wal_appends=shape["wal_appends"],
+                    wal_syncs=shape["wal_syncs"],
+                    wal_mb=shape["wal_bytes"] / 1e6,
+                )
+            name = f"maintenance/{codec}/{mode}"
+            if sweep:
+                name += f"/wal-{wal}"
+            rows.append(BenchRow(name, float(np.mean(us)), extras))
+            tree.close()
+            if tmp is not None:
+                tmp.cleanup()
+    # differential: every (wal, maintenance) leg saw identical writes, so
+    # every filter result must be bit-identical — durability knobs are
+    # never allowed to change query results
+    base = results[(wal_modes[0], "sync")]
+    for (wal, mode), res in results.items():
+        assert base.keys.tolist() == res.keys.tolist(), (
+            f"{codec}: filter keys diverge for wal={wal} mode={mode}")
+        assert base.values.tolist() == res.values.tolist(), (
+            f"{codec}: filter values diverge for wal={wal} mode={mode}")
     return rows
 
 
-def run(n: int = 40_000, codecs=CODECS) -> List[BenchRow]:
+def run(n: int = 40_000, codecs=CODECS, wal_modes=("off",)) -> List[BenchRow]:
     out: List[BenchRow] = []
     for codec in codecs:
-        out.extend(run_one(codec, n))
+        out.extend(run_one(codec, n, wal_modes=wal_modes))
     return out
 
 
@@ -115,6 +148,10 @@ def main() -> None:
     ap.add_argument("--n", type=int, default=40_000)
     ap.add_argument("--codec", default="all",
                     choices=list(CODECS) + ["all"])
+    ap.add_argument("--wal", default="off",
+                    choices=list(WAL_MODES) + ["all"],
+                    help="write-ahead-log sweep: measure the durability "
+                         "tax of group/every fsync vs the wal-off baseline")
     ap.add_argument("--smoke", action="store_true",
                     help="small n, one codec — CI parity check")
     args = ap.parse_args()
@@ -122,7 +159,8 @@ def main() -> None:
     codecs = CODECS if args.codec == "all" else (args.codec,)
     if args.smoke and args.codec == "all":
         codecs = ("opd", "blob")
-    for row in run(n, codecs):
+    wal_modes = WAL_MODES if args.wal == "all" else (args.wal,)
+    for row in run(n, codecs, wal_modes):
         print(row.csv(), flush=True)
 
 

@@ -1,16 +1,19 @@
 # The paper's primary contribution: the LSM-OPD engine (OPD encoding,
 # SCT layout, Algorithm-1 compaction, vectorized filter evaluation),
-# plus the version-set state layer and background maintenance pipeline.
+# plus the version-set state layer, background maintenance pipeline,
+# and the group-commit WAL durability layer.
 from repro.core.lsm import LSMConfig, LSMTree, Snapshot
 from repro.core.maintenance import MaintenanceError, MaintenanceScheduler
 from repro.core.opd import OPD, Predicate, as_fixed_bytes
 from repro.core.sct import SCT, bitpack, bitunpack, pack_width
 from repro.core.stats import StageStats
 from repro.core.version import Version, VersionEdit, VersionSet
+from repro.core.wal import WALRecord, WALWriter, wal_prefix_for
 
 __all__ = [
     "LSMConfig", "LSMTree", "Snapshot", "OPD", "Predicate", "as_fixed_bytes",
     "SCT", "bitpack", "bitunpack", "pack_width", "StageStats",
     "Version", "VersionEdit", "VersionSet",
     "MaintenanceScheduler", "MaintenanceError",
+    "WALRecord", "WALWriter", "wal_prefix_for",
 ]

@@ -47,6 +47,7 @@ from repro.core.opd import OPD
 from repro.core.sct import SCT, BlobManager, build_sct, pack_width
 from repro.core.stats import StageStats
 from repro.storage.io import FileStore
+from repro.testing.crashpoints import crashpoint
 
 _SEQ_MAX = np.uint64(0xFFFFFFFFFFFFFFFF)
 
@@ -171,6 +172,7 @@ def merge_scts(
             else:
                 raise ValueError(codec)
         outputs.append(out)
+        crashpoint("compact.mid_spill")
 
     return CompactionResult(outputs, n_in, n_out, n_dropped, dict_compares)
 

@@ -259,7 +259,11 @@ def _code_masks_many(
             [(lo, hi - 1) if lo < hi else (1, 0) for lo, hi in ranges],
             np.uint32)
         bitmaps = kops.multi_range_filter_packed(s.packed, s.code_bits, tbl)
-        return [kops.bitmap_to_mask(bitmaps[q], s.code_bits, s.n)
+        # tombstones carry code -1 in the unpacked column (so [lo, hi)
+        # with lo >= 0 never matches them) but pack as 0 — the kernel
+        # sees a live-looking code, so mask them out of its bitmap here
+        live = ~s.tombs
+        return [kops.bitmap_to_mask(bitmaps[q], s.code_bits, s.n) & live
                 for q in range(len(ranges))]
     raise ValueError(backend)
 

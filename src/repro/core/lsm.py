@@ -60,8 +60,10 @@ from repro.core.opd import Predicate
 from repro.core.sct import SCT, BlobManager, build_sct, record_disk_bytes
 from repro.core.stats import StageStats
 from repro.core.version import Version, VersionEdit, VersionSet
+from repro.core.wal import OP_DELETE, OP_PUT, WALWriter, wal_prefix_for
 from repro.storage.devices import DeviceModel
 from repro.storage.io import FileStore
+from repro.testing.crashpoints import crashpoint
 
 
 @dataclasses.dataclass(frozen=True)
@@ -86,6 +88,9 @@ class LSMConfig:
     l0_stop: Optional[int] = None      # default: l0_limit + 8
     slowdown_seconds: float = 0.002    # per-rotation delay in the band
     max_immutables: int = 4            # frozen-memtable queue backpressure
+    # --- durability (docs/DESIGN.md §10) ---
+    wal_sync: str = "off"              # 'off' | 'group' | 'every'
+    wal_group_bytes: int = 64 * 1024   # group-commit fsync threshold
 
     @property
     def mem_bytes(self) -> int:
@@ -148,6 +153,20 @@ class LSMTree:
         self.memtable = MemTable(cfg.value_width, cfg.key_bytes)
         self.versions = VersionSet(self.store, cfg.max_levels,
                                    manifest=manifest)
+        # write-ahead log (docs/DESIGN.md §10): per-tree segments in the
+        # spill dir, named after the manifest so shard trees don't collide
+        self.wal: Optional[WALWriter] = None
+        self.wal_replayed = 0
+        if cfg.wal_sync != "off":
+            if cfg.wal_sync not in ("group", "every"):
+                raise ValueError(f"unknown wal_sync mode {cfg.wal_sync!r}")
+            if not self.store.spill_dir:
+                raise ValueError(
+                    "wal_sync requires a spill_dir-backed store")
+            self.wal = WALWriter(
+                self.store.spill_dir,
+                prefix=wal_prefix_for(self.versions.manifest_name),
+                sync=cfg.wal_sync, group_bytes=cfg.wal_group_bytes)
         self._immutables: List[MemTable] = []  # newest first; flush pops tail
         self._lock = threading.RLock()
         self._seqno = 0
@@ -200,9 +219,12 @@ class LSMTree:
         """Rebuild a tree after a crash/restart: ``FileStore.restore``
         recovers the spilled bytes, the manifest replay recovers the tree
         shape and seqno watermark, and SCT files a crash stranded between
-        spill and manifest append are garbage-collected.  Unflushed
-        memtable contents are lost (there is no WAL — flush/drain before
-        a planned shutdown)."""
+        spill and manifest append are garbage-collected.  With
+        ``cfg.wal_sync != 'off'`` the WAL tail is then replayed into the
+        fresh memtable — records above the manifest watermark, stopping
+        at the first torn record — so every acknowledged write survives.
+        With the WAL off, unflushed memtable contents are lost
+        (flush/drain before a planned shutdown)."""
         if store is None:
             store = FileStore.restore(spill_dir)
         tree = cls(cfg, store=store, manifest=manifest, scheduler=scheduler)
@@ -227,11 +249,36 @@ class LSMTree:
                     live[int(f)] = live.get(int(f), 0) + int(c)
             tree.blob_mgr.live = dict(live)
             tree.blob_mgr.total = dict(live)
+        if cfg.wal_sync != "off":
+            # replay the WAL tail: only records the manifest watermark
+            # does not already cover (flushed segments are truncated at
+            # flush time, but the crash may have raced that)
+            wal, records = WALWriter.restore(
+                store.spill_dir,
+                prefix=wal_prefix_for(tree.versions.manifest_name),
+                sync=cfg.wal_sync, group_bytes=cfg.wal_group_bytes)
+            tree.wal = wal
+            watermark = tree.versions.last_seqno
+            replayed = 0
+            for rec in records:
+                if rec.seqno <= watermark:
+                    continue
+                if rec.op == OP_PUT:
+                    tree.memtable.put(rec.key, rec.value, rec.seqno)
+                else:
+                    tree.memtable.delete(rec.key, rec.seqno)
+                tree._seqno = max(tree._seqno, rec.seqno)
+                replayed += 1
+            tree.wal_replayed = replayed
         return tree
 
     def close(self) -> None:
         if self._sched is not None and self._owns_sched:
             self._sched.close()
+        if self.wal is not None:
+            # planned shutdown: fsync the tail and keep the segments —
+            # the next restore replays them
+            self.wal.close()
 
     def __enter__(self) -> "LSMTree":
         return self
@@ -289,26 +336,48 @@ class LSMTree:
     # writes
     # ------------------------------------------------------------------ #
     def put(self, key: int, value: bytes) -> None:
+        self._check_maintenance()
         self._seqno += 1
         self.ingest_bytes += self.cfg.key_bytes + 8 + self.cfg.value_width
+        if self.wal is not None:
+            # log-before-apply: the record is on (or heading to) disk
+            # before the memtable can serve it to readers
+            self.wal.append(OP_PUT, key, self._seqno, value)
         self.memtable.put(key, value, self._seqno)
         self._after_write()
 
     def put_batch(self, keys: np.ndarray, values: np.ndarray) -> None:
-        """Bulk insertion path for benchmarks (amortizes Python overhead)."""
+        """Bulk insertion path for benchmarks (amortizes Python overhead).
+        Under ``wal_sync='group'`` the whole batch is acknowledged by ONE
+        fsync barrier at return — the group-commit fast path."""
+        self._check_maintenance()
         self.ingest_bytes += len(keys) * (self.cfg.key_bytes + 8
                                           + self.cfg.value_width)
         for k, v in zip(keys.tolist(), values):
             self._seqno += 1
+            if self.wal is not None:
+                self.wal.append(OP_PUT, int(k), self._seqno, bytes(v))
             self.memtable.put(int(k), bytes(v), self._seqno)
             if self.memtable.approx_bytes >= self.cfg.mem_bytes:
                 self._handle_full_memtable()
+        if self.wal is not None:
+            self.wal.sync()
 
     def delete(self, key: int) -> None:
+        self._check_maintenance()
         self._seqno += 1
         self.ingest_bytes += self.cfg.key_bytes + 8
+        if self.wal is not None:
+            self.wal.append(OP_DELETE, key, self._seqno)
         self.memtable.delete(key, self._seqno)
         self._after_write()
+
+    def _check_maintenance(self) -> None:
+        """Surface background-worker failures on the next ingest instead
+        of silently accepting writes a dead flush pipeline will never
+        persist (tests/test_maintenance.py worker error-path suite)."""
+        if self._sched is not None:
+            self._sched.raise_if_failed()
 
     def _after_write(self) -> None:
         if self.memtable.approx_bytes >= self.cfg.mem_bytes:
@@ -330,6 +399,10 @@ class LSMTree:
                 return False
             self._immutables.insert(0, self.memtable)
             self.memtable = MemTable(self.cfg.value_width, self.cfg.key_bytes)
+            if self.wal is not None:
+                # seal under the same lock as the swap: segment k holds
+                # exactly memtable k's records (truncation granularity)
+                self.wal.rotate()
         if self._sched is not None:
             self._sched.schedule_flush(self)
         return True
@@ -374,27 +447,44 @@ class LSMTree:
             imm = self._immutables[-1]
         frozen = imm.freeze()
         fe = self.file_entries
-        with self.flush_stats.time("encode"):
-            new = []
-            for lo in range(0, frozen.n, fe):
-                hi = min(lo + fe, frozen.n)
-                sct = build_sct(
-                    keys=frozen.keys[lo:hi], seqnos=frozen.seqnos[lo:hi],
-                    tombs=frozen.tombs[lo:hi], raw_values=frozen.values[lo:hi],
-                    level=0, codec=self.cfg.codec,
-                    key_bytes=self.cfg.key_bytes, value_width=self.cfg.value_width,
-                    block_bytes=self.cfg.block_bytes,
-                    bloom_bits_per_key=self.cfg.bloom_bits_per_key,
-                    store=self.store, blob_mgr=self.blob_mgr,
-                )
-                new.append(sct)
+        new: List[SCT] = []
+        try:
+            with self.flush_stats.time("encode"):
+                for lo in range(0, frozen.n, fe):
+                    hi = min(lo + fe, frozen.n)
+                    sct = build_sct(
+                        keys=frozen.keys[lo:hi], seqnos=frozen.seqnos[lo:hi],
+                        tombs=frozen.tombs[lo:hi], raw_values=frozen.values[lo:hi],
+                        level=0, codec=self.cfg.codec,
+                        key_bytes=self.cfg.key_bytes, value_width=self.cfg.value_width,
+                        block_bytes=self.cfg.block_bytes,
+                        bloom_bits_per_key=self.cfg.bloom_bits_per_key,
+                        store=self.store, blob_mgr=self.blob_mgr,
+                    )
+                    new.append(sct)
+                    crashpoint("flush.mid_spill")
+        except Exception:
+            # a failed flush must not leak freshly spilled chunks: no
+            # version references them yet, so unregister before re-raising
+            # (the memtable stays queued — a retry re-encodes it whole).
+            # Exception, not BaseException: a SimulatedCrash is a kill
+            # and must leave the orphans for restore-time GC.
+            for s in new:
+                self.store.delete(s.file_id)
+            raise
         last = int(frozen.seqnos.max()) if frozen.n else None
+        crashpoint("flush.before_manifest")
         # adds listed oldest-chunk-first; Version.with_edit prepends the
         # reversed list, reproducing the legacy ``new[::-1] + L0`` order
         self.versions.apply(VersionEdit(adds=[(0, s) for s in new],
                                         last_seqno=last))
+        crashpoint("flush.after_manifest")
         with self._lock:
             self._immutables.pop()
+        if self.wal is not None and last is not None:
+            # every record <= last is now reachable through the manifest:
+            # sealed segments it covers are dead weight
+            self.wal.truncate_upto(last)
         self.n_flushes += 1
         return True
 
@@ -547,7 +637,9 @@ class LSMTree:
             adds=[(out_level, s) for s in res.outputs],
             drops=[(lvl, s.file_id) for lvl, gone in drop_in for s in gone],
         )
+        crashpoint("compact.before_manifest")
         self.versions.apply(edit)
+        crashpoint("compact.after_manifest")
         # files leave the store only after the edit is durable: a crash
         # in between leaves orphans (GC'd on restore), never dangling refs
         for _, gone in drop_in:
@@ -626,6 +718,7 @@ class LSMTree:
                      for _, s, sel in refs]
             new_vals = np.concatenate(parts)
             new_fid, _ = self.blob_mgr.append(new_vals)
+            crashpoint("gc.mid_blob")
             off = 0
             replaces = []
             for lvl_idx, s, sel in refs:
@@ -640,6 +733,7 @@ class LSMTree:
                 self.store.write(ns, ns.disk_bytes, fid=ns.file_id)
                 replaces.append((lvl_idx, s.file_id, ns))
             self.versions.apply(VersionEdit(replaces=replaces))
+            crashpoint("gc.after_replace")
             for _, s, _sel in refs:
                 self.store.delete(s.file_id)
             self.blob_mgr.forget(fid)
@@ -787,4 +881,9 @@ class LSMTree:
             "version": v.vid,
             "n_immutables": len(self._immutables),
             "maintenance": self.cfg.maintenance,
+            "wal_sync": self.cfg.wal_sync,
+            "wal_appends": self.wal.appends if self.wal else 0,
+            "wal_syncs": self.wal.syncs if self.wal else 0,
+            "wal_bytes": self.wal.bytes_written if self.wal else 0,
+            "wal_replayed": self.wal_replayed,
         }

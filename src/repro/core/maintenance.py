@@ -100,35 +100,42 @@ class MaintenanceScheduler:
         self.executor.submit(self._compact_worker, tree)
 
     def _flush_worker(self, tree) -> None:
+        failed = False
         try:
             while tree._flush_oldest_immutable():
                 with self._lock:  # '+=' from pool threads loses updates
                     self.n_bg_flushes += 1
                     self._cond.notify_all()
                 self.schedule_compaction(tree)
-        except BaseException as e:  # propagate via drain/throttle
+        except BaseException as e:  # propagate via drain/throttle/ingest
+            failed = True
             self._record_error(e)
         finally:
             with self._lock:
                 self._flush_inflight.discard(id(tree))
                 self._cond.notify_all()
-            # a rotation may have raced the queue-empty check: re-kick
-            if tree._pending_flushes():
+            # a rotation may have raced the queue-empty check: re-kick —
+            # but never after a failure, or a persistent fault (or a
+            # simulated crash) becomes a hot retry loop; the writer sees
+            # the recorded error on its next ingest/drain instead
+            if not failed and tree._pending_flushes():
                 self.schedule_flush(tree)
 
     def _compact_worker(self, tree) -> None:
+        failed = False
         try:
             while tree._compact_one_step():
                 with self._lock:
                     self.n_bg_compactions += 1
                     self._cond.notify_all()
         except BaseException as e:
+            failed = True
             self._record_error(e)
         finally:
             with self._lock:
                 self._compact_inflight.discard(id(tree))
                 self._cond.notify_all()
-            if tree._compaction_debt() > 0.0:
+            if not failed and tree._compaction_debt() > 0.0:
                 self.schedule_compaction(tree)
 
     def _record_error(self, e: BaseException) -> None:
@@ -143,6 +150,14 @@ class MaintenanceScheduler:
             raise MaintenanceError(
                 f"{len(errs)} background maintenance job(s) failed: "
                 f"{errs[0]!r}") from errs[0]
+
+    def raise_if_failed(self) -> None:
+        """Ingest-path guard: zero-cost when healthy (one unlocked list
+        check), raises ``MaintenanceError`` on the writer's next op after
+        a worker died — accepting writes a dead flush pipeline will never
+        persist would silently break the durability contract."""
+        if self._errors:
+            self.check_errors()
 
     # ------------------------------------------------------------------ #
     # writer-side throttle (graduated: none -> slowdown -> stop)

@@ -187,7 +187,9 @@ class VersionSet:
     def recover(cls, store: FileStore, max_levels: int,
                 manifest: Optional[str] = None) -> "VersionSet":
         """Replay the manifest over a restored store: rebuild the exact
-        tree shape (and seqno watermark) the logged edits describe."""
+        tree shape (and seqno watermark) the logged edits describe.
+        A torn final line (crash mid-append) is dropped and physically
+        truncated; corruption mid-log raises."""
         vs = cls(store, max_levels, manifest=manifest)
         path = vs._manifest_path
         if path is None or not os.path.exists(path):
@@ -198,27 +200,62 @@ class VersionSet:
         fid_levels: List[List[int]] = [[] for _ in range(max_levels)]
         last_seqno = 0
         vid = 0
-        with open(path) as f:
-            for line in f:
-                line = line.strip()
-                if not line:
-                    continue
+        with open(path, "rb") as f:
+            data = f.read()
+        # byte-offset line walk instead of line iteration: a crash mid-
+        # append leaves a torn FINAL line (no newline, or unparseable
+        # garbage with nothing after it) — recover to the last good edit
+        # and truncate the file so future appends don't concatenate onto
+        # garbage.  Corruption with more edits AFTER it is not a torn
+        # tail and still raises: silently dropping mid-log edits would
+        # resurrect deleted files / lose installed ones.
+        good = 0
+        torn = False
+        while good < len(data):
+            nl = data.find(b"\n", good)
+            raw = data[good:nl] if nl >= 0 else data[good:]
+            end = nl + 1 if nl >= 0 else len(data)
+            line = raw.strip()
+            if not line:
+                good = end
+                continue
+            try:
                 rec = json.loads(line)
-                vid += 1
-                last_seqno = max(last_seqno, int(rec.get("seqno", 0)))
-                for lvl, old_fid, new_fid in rec.get("replaces", ()):
-                    fid_levels[lvl] = [new_fid if f == old_fid else f
-                                       for f in fid_levels[lvl]]
-                for lvl, fid in rec.get("drops", ()):
-                    fid_levels[lvl] = [f for f in fid_levels[lvl]
-                                       if f != fid]
-                adds = rec.get("adds", ())
-                l0 = [fid for lvl, fid in adds if lvl == 0]
-                if l0:
-                    fid_levels[0] = list(reversed(l0)) + fid_levels[0]
-                for lvl, fid in adds:
-                    if lvl != 0:
-                        fid_levels[lvl].append(fid)
+            except ValueError:
+                if data[end:].strip():
+                    raise ValueError(
+                        f"manifest {path} corrupted at byte {good} with "
+                        "further edits after the bad record")
+                torn = True
+                break
+            if not isinstance(rec, dict):
+                # e.g. a torn line whose prefix still parses ("4" from
+                # a truncated number) — same torn-tail rules apply
+                if data[end:].strip():
+                    raise ValueError(
+                        f"manifest {path} corrupted at byte {good} with "
+                        "further edits after the bad record")
+                torn = True
+                break
+            good = end
+            vid += 1
+            last_seqno = max(last_seqno, int(rec.get("seqno", 0)))
+            for lvl, old_fid, new_fid in rec.get("replaces", ()):
+                fid_levels[lvl] = [new_fid if f == old_fid else f
+                                   for f in fid_levels[lvl]]
+            for lvl, fid in rec.get("drops", ()):
+                fid_levels[lvl] = [f for f in fid_levels[lvl]
+                                   if f != fid]
+            adds = rec.get("adds", ())
+            l0 = [fid for lvl, fid in adds if lvl == 0]
+            if l0:
+                fid_levels[0] = list(reversed(l0)) + fid_levels[0]
+            for lvl, fid in adds:
+                if lvl != 0:
+                    fid_levels[lvl].append(fid)
+        if torn:
+            with open(path, "r+b") as f:
+                f.truncate(good)
         levels: List[List[SCT]] = [
             [store.payload(fid) for fid in lvl] for lvl in fid_levels]
         for i in range(1, max_levels):

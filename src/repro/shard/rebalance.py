@@ -86,9 +86,13 @@ def split_shard(
     Returns ``(pivot, left, right)`` where left owns ``[lo, pivot)`` and
     right owns ``[pivot, hi)``, or None when the tree holds fewer than
     two distinct keys (nothing to split).  The halves share the old
-    tree's backing store; the old tree's SCT files are released from it
-    (pinned snapshots keep reading their in-memory SCT objects — only
-    blob value logs need the store, and those are retained).
+    tree's backing store.  The old tree's SCT files are deliberately NOT
+    deleted here: the caller must delete them only after the new shard
+    table is durable (``ShardedLSM._persist_shard_table``) — deleting
+    first would strand a crash with a shard table whose manifest
+    references missing files.  (Pinned snapshots keep reading their
+    in-memory SCT objects either way; only blob value logs need the
+    store, and those are retained.)
 
     ``manifests`` names the halves' fresh version logs (the sharded
     engine allocates them so a shared spill dir stays collision-free);
@@ -141,8 +145,6 @@ def split_shard(
         half.compaction_in_bytes += sum(s.disk_bytes for s in runs)
         half.compaction_out_bytes += sum(s.disk_bytes for s in res.outputs)
         halves.append(half)
-    for s in runs:
-        tree.store.delete(s.file_id)
     return pivot, halves[0], halves[1]
 
 

@@ -33,6 +33,8 @@ import numpy as np
 from repro.core.filter_exec import FilterResult
 from repro.core.lsm import LSMConfig, LSMTree, Snapshot
 from repro.core.maintenance import MaintenanceScheduler
+from repro.core.wal import wal_prefix_for
+from repro.testing.crashpoints import crashpoint
 from repro.core.opd import Predicate
 from repro.core.stats import StageStats
 from repro.shard.executor import ShardExecutor
@@ -168,8 +170,9 @@ class ShardedLSM:
     def restore(cls, cfg: LSMConfig, spill_dir: str, **kw) -> "ShardedLSM":
         """Rebuild a sharded engine after a crash/restart: one
         ``FileStore.restore`` for the shared bytes, the shard table for
-        the router boundaries, and one manifest replay per shard tree.
-        Unflushed memtable contents are lost (no WAL)."""
+        the router boundaries, and one manifest replay per shard tree
+        (each of which replays its own WAL tail when ``cfg.wal_sync``
+        is on; with the WAL off unflushed memtable contents are lost)."""
         store = FileStore.restore(spill_dir)
         path = os.path.join(spill_dir, _SHARDS_JSON)
         with open(path) as f:
@@ -178,8 +181,12 @@ class ShardedLSM:
         # placeholder (n_shards=1 would pin the executor to one worker)
         kw.setdefault("n_workers",
                       min(len(table["manifests"]), os.cpu_count() or 1))
-        eng = cls(cfg, n_shards=1, key_max=int(table["key_max"]),
-                  spill_dir=None, **kw)
+        # the placeholder shard has no spill dir, so it cannot host a
+        # WAL — build it wal-off, then restore the real shards with the
+        # caller's cfg
+        eng = cls(dataclasses.replace(cfg, wal_sync="off"), n_shards=1,
+                  key_max=int(table["key_max"]), spill_dir=None, **kw)
+        eng.cfg = cfg
         eng.store = store
         eng.router = ShardRouter.from_uppers(table["uppers"],
                                              int(table["key_max"]))
@@ -187,6 +194,20 @@ class ShardedLSM:
         if eng.scheduler is not None:  # drop the placeholder shard
             for t in eng.shards:
                 eng.scheduler.unregister(t)
+        # a crash mid-split can leave manifests (and WAL segments) of
+        # half-built shards the durable table never adopted; purge them
+        # BEFORE restoring, or a reallocated manifest name would append
+        # onto stale edits / replay a dead shard's WAL records
+        referenced = set(table["manifests"])
+        wal_prefixes = {wal_prefix_for(m) for m in referenced}
+        for name in os.listdir(spill_dir):
+            full = os.path.join(spill_dir, name)
+            if (name.startswith("MANIFEST") and name.endswith(".log")
+                    and name not in referenced):
+                os.remove(full)
+            elif name.endswith(".wal") \
+                    and name.rsplit("-", 1)[0] not in wal_prefixes:
+                os.remove(full)
         eng.shards = [
             LSMTree.restore(cfg, spill_dir, manifest=name, store=store,
                             scheduler=eng.scheduler, gc_orphans=False)
@@ -332,11 +353,19 @@ class ShardedLSM:
                 self._splitter.defer(old)  # unsplittable: back off
                 continue
             pivot, left, right = got
+            old_runs = old.all_runs()
             self.router.split(i, pivot)
             self.shards[i:i + 1] = [left, right]
             self._retire(old)
             self.n_splits += 1
+            crashpoint("split.before_table")
             self._persist_shard_table()
+            # the old shard's files leave the store only after the new
+            # table is durable: a crash before the rename must find the
+            # OLD shard's manifest still fully backed (the halves' files
+            # are then orphans, GC'd by the next restore)
+            for s in old_runs:
+                self.store.delete(s.file_id)
 
     def _retire(self, tree: LSMTree) -> None:
         for name in _STAGE_STATS:
@@ -346,6 +375,10 @@ class ShardedLSM:
             self._retired_counts[c] += getattr(tree, c)
         if self.scheduler is not None:
             self.scheduler.unregister(tree)
+        if tree.wal is not None:
+            # the split flushed + drained the tree, so its WAL holds
+            # nothing above the manifest watermark — drop the segments
+            tree.wal.discard()
 
     # ------------------------------------------------------------------ #
     # reads (scatter-gather against a pinned snapshot vector)
@@ -465,6 +498,8 @@ class ShardedLSM:
 
     def close(self) -> None:
         self.executor.close()
+        for t in self.shards:
+            t.close()  # fsyncs each shard's WAL tail (planned shutdown)
 
     def __enter__(self) -> "ShardedLSM":
         return self

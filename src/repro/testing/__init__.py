@@ -1,0 +1,22 @@
+"""Fault-injection and workload tooling shared by the recovery tests.
+
+Lives under ``src`` (not ``tests/``) because the engine itself is
+instrumented with ``crashpoint(...)`` site markers, and the subprocess
+crash driver must be importable as ``python -m repro.testing.crash_driver``.
+"""
+
+from repro.testing.crashpoints import (
+    CRASH,
+    CRASH_POINTS,
+    CrashPointRegistry,
+    SimulatedCrash,
+    crashpoint,
+)
+
+__all__ = [
+    "CRASH",
+    "CRASH_POINTS",
+    "CrashPointRegistry",
+    "SimulatedCrash",
+    "crashpoint",
+]

@@ -1,0 +1,109 @@
+"""Subprocess side of the kill-based crash tests.
+
+``tests/test_wal_recovery.py`` mostly simulates crashes in-process
+(``SimulatedCrash`` + ``WALWriter.simulate_power_loss``) because it's
+fast enough to enumerate the full site matrix.  This driver is the
+ground-truth variant: it runs the same deterministic workload in a real
+child process with the armed site set to ``action='exit'``, so the
+crash is an honest ``os._exit(137)`` — no Python unwinding, no buffered
+file flushing, no atexit.  The parent then restores whatever the dead
+process left in the spill dir.
+
+Acknowledgement protocol: every ``--ack-every`` acknowledged mutations
+the driver atomically rewrites ``ACKS.json`` in the spill dir with
+
+    {"acked_muts": <ops that fully returned>,
+     "durable_seqno": <WAL fsync watermark at that instant>}
+
+via tmp + fsync + rename, so the parent gets a crash-safe *lower bound*
+on what recovery must reproduce.  Exit codes: 137 = armed site fired,
+0 = workload completed without crashing (the parent treats that as
+"site never reached" and skips).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import tempfile
+
+
+def _write_acks(spill_dir: str, acked_muts: int, durable_seqno: int) -> None:
+    path = os.path.join(spill_dir, "ACKS.json")
+    fd, tmp = tempfile.mkstemp(dir=spill_dir, prefix=".acks-")
+    try:
+        with os.fdopen(fd, "w") as f:
+            json.dump({"acked_muts": acked_muts,
+                       "durable_seqno": durable_seqno}, f)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)
+    except BaseException:
+        try:
+            os.unlink(tmp)
+        except FileNotFoundError:
+            pass
+        raise
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--spill", required=True)
+    ap.add_argument("--codec", default="opd")
+    ap.add_argument("--backend", default="numpy")
+    ap.add_argument("--maintenance", default="sync",
+                    choices=["sync", "background"])
+    ap.add_argument("--wal", default="every", choices=["group", "every"])
+    ap.add_argument("--point", required=True)
+    ap.add_argument("--skip", type=int, default=0)
+    ap.add_argument("--n", type=int, default=600)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--key-space", type=int, default=400)
+    ap.add_argument("--ack-every", type=int, default=50)
+    args = ap.parse_args(argv)
+
+    from repro.core.lsm import LSMConfig, LSMTree
+    from repro.testing.crashpoints import CRASH
+    from repro.testing.workload import gen_ops
+
+    cfg = LSMConfig(codec=args.codec, filter_backend=args.backend,
+                    compaction_backend=args.backend,
+                    maintenance=args.maintenance,
+                    wal_sync=args.wal,
+                    memtable_bytes=8 * 1024, file_bytes=16 * 1024,
+                    l0_limit=2, size_ratio=3, max_levels=5,
+                    blob_gc_threshold=0.3)
+    tree = LSMTree(cfg, spill_dir=args.spill)
+    ops = gen_ops(args.seed, args.n, args.key_space)
+
+    _write_acks(args.spill, 0, 0)
+    CRASH.arm(args.point, skip=args.skip, action="exit")
+
+    acked = 0
+    for op in ops:
+        if op[0] == "put":
+            tree.put(op[1], op[2])
+            acked += 1
+        elif op[0] == "delete":
+            tree.delete(op[1])
+            acked += 1
+        elif op[0] == "flush":
+            tree.flush()
+        else:
+            tree.compact_all()
+        if acked % args.ack_every == 0:
+            _write_acks(args.spill, acked,
+                        tree.wal.durable_seqno if tree.wal else acked)
+    # Reached the end without the site firing: tell the parent so it can
+    # skip rather than mis-report a vacuous pass.
+    CRASH.disarm()
+    _write_acks(args.spill, acked,
+                tree.wal.durable_seqno if tree.wal else acked)
+    tree.close()
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

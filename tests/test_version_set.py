@@ -104,6 +104,70 @@ def test_manifest_replay_tolerates_dropped_files(tmp_path):
     assert back.current.n_files == 0
 
 
+def test_manifest_recover_truncated_final_line(tmp_path):
+    """A crash mid-append leaves a torn final line.  Recovery must keep
+    every complete edit, physically truncate the garbage (so future
+    appends don't concatenate onto it), and keep working."""
+    spill = str(tmp_path / "spill")
+    store = FileStore(spill)
+    vs = VersionSet(store, max_levels=2)
+    a = _sct(store, [1])
+    b = _sct(store, [2])
+    vs.apply(VersionEdit(adds=[(0, a)], last_seqno=1))
+    vs.apply(VersionEdit(adds=[(0, b)], last_seqno=2))
+    path = vs._manifest_path
+    good_len = os.path.getsize(path)
+    with open(path, "ab") as f:   # torn third edit: no newline, cut JSON
+        f.write(b'{"adds": [[0, 99')
+
+    back = VersionSet.recover(FileStore.restore(spill), max_levels=2)
+    assert back.last_seqno == 2
+    assert [s.file_id for s in back.current.levels[0]] == \
+        [b.file_id, a.file_id]
+    assert os.path.getsize(path) == good_len  # garbage physically gone
+    # the truncated log accepts further edits cleanly
+    c = _sct(back.store, [3])
+    back.apply(VersionEdit(adds=[(0, c)], last_seqno=3))
+    again = VersionSet.recover(FileStore.restore(spill), max_levels=2)
+    assert [s.file_id for s in again.current.levels[0]] == \
+        [c.file_id, b.file_id, a.file_id]
+
+
+def test_manifest_recover_torn_non_dict_tail(tmp_path):
+    """A tail whose prefix still parses as JSON but isn't an edit dict
+    (e.g. '4' from a truncated number) follows the same torn-tail rule."""
+    spill = str(tmp_path / "spill")
+    store = FileStore(spill)
+    vs = VersionSet(store, max_levels=2)
+    a = _sct(store, [1])
+    vs.apply(VersionEdit(adds=[(0, a)], last_seqno=1))
+    path = vs._manifest_path
+    good_len = os.path.getsize(path)
+    with open(path, "ab") as f:
+        f.write(b"4")
+    back = VersionSet.recover(FileStore.restore(spill), max_levels=2)
+    assert [s.file_id for s in back.current.levels[0]] == [a.file_id]
+    assert os.path.getsize(path) == good_len
+
+
+def test_manifest_recover_rejects_mid_log_corruption(tmp_path):
+    """Garbage with complete edits AFTER it is not a torn tail — dropping
+    those edits would resurrect deleted files, so recovery must refuse."""
+    spill = str(tmp_path / "spill")
+    store = FileStore(spill)
+    vs = VersionSet(store, max_levels=2)
+    a = _sct(store, [1])
+    b = _sct(store, [2])
+    vs.apply(VersionEdit(adds=[(0, a)], last_seqno=1))
+    path = vs._manifest_path
+    with open(path, "ab") as f:
+        f.write(b"!!! not json !!!\n")
+    vs_dirty = VersionSet(store, max_levels=2)
+    vs_dirty.apply(VersionEdit(adds=[(0, b)], last_seqno=2))  # edit after
+    with pytest.raises(ValueError, match="corrupted at byte"):
+        VersionSet.recover(FileStore.restore(spill), max_levels=2)
+
+
 def test_gc_orphans_single_and_union(tmp_path):
     spill = str(tmp_path / "spill")
     store = FileStore(spill)
