@@ -94,7 +94,7 @@ def run_backends(n: int = 60_000, width: int = 128) -> List[BenchRow]:
     shows host cost only (TPU timing requires real hardware)."""
     import dataclasses
     rows = []
-    for backend in ("numpy", "jax", "jax_packed"):
+    for backend in ("numpy", "jax", "jax_packed", "fused"):
         tree = build_tree("lsm_opd", width)
         tree.cfg = dataclasses.replace(tree.cfg, filter_backend=backend)
         load_tree(tree, n, width)
@@ -150,6 +150,77 @@ def run_batched(n: int = 60_000, width: int = 128, ks=None,
     return rows
 
 
+def load_tree_clustered(tree, n: int, width: int, upd_per_val: int = 4) -> None:
+    """Zone-map workload: values correlate with insertion (key) order, so
+    per-block code ranges are narrow — the data layout where zone maps
+    earn their keep (time-series / append-mostly tables).  Uniform-random
+    values give every 4 KB block the full code domain and zones can prune
+    nothing; that regime is covered by ``run`` / ``run_backends``."""
+    keys = np.arange(n, dtype=np.uint64)
+    vals = np.asarray([b"ts_%012d" % (k // upd_per_val) for k in range(n)],
+                      dtype=f"S{width}")
+    tree.put_batch(keys, vals)
+    tree.flush()
+
+
+def run_zonemap(n: int = 60_000, width: int = 128, ks=None,
+                repeats: int = 3) -> List[BenchRow]:
+    """Zone-mapped fused megakernel vs the staged jax_packed path.
+
+    Clustered values + selective predicates (<1 % selectivity): reports
+    pruning rate (blocks skipped / total), launch counts (fused: one per
+    LEVEL; staged: one per run) and per-predicate latency for both
+    paths.  Results are asserted equal, so the speed column is never
+    comparing different answers."""
+    import dataclasses
+    rows = []
+    trees = {}
+    for backend in ("jax_packed", "fused"):
+        t = build_tree("lsm_opd", width)
+        t.cfg = dataclasses.replace(t.cfg, filter_backend=backend)
+        load_tree_clustered(t, n, width)
+        trees[backend] = t
+    for k in (ks or [1, 16]):
+        # k disjoint narrow ranges spread across the code domain
+        preds = []
+        for i in range(k):
+            lo = (i * 997) % max(1, n // 8)
+            preds.append(Predicate("range", b"ts_%012d" % lo,
+                                   b"ts_%012d" % (lo + 5)))
+        out = {}
+        for backend, t in trees.items():
+            snap = t.snapshot()
+            _ = t.filter_many(preds, snapshot=snap)  # warm jit traces
+            t.filter_stats.counts.clear()
+            t0 = time.perf_counter()
+            for _ in range(repeats):
+                out[backend] = t.filter_many(preds, snapshot=snap)
+            dt = (time.perf_counter() - t0) / repeats
+            c = t.filter_stats.counts
+            n_runs = sum(1 for s in snap.runs if s.n > 0)
+            # staged path: one multi_filter launch per live run per call;
+            # fused path: counted directly (one per level per call)
+            launches = (c.get("fused_launches", 0) // repeats
+                        if backend == "fused" else n_runs)
+            derived = {"us_per_pred": dt / k * 1e6,
+                       "launches_per_call": launches,
+                       "runs": n_runs,
+                       "matches": sum(r.keys.shape[0] for r in out[backend])}
+            if backend == "fused":
+                tot = max(1, c.get("zone_blocks_total", 0))
+                derived["block_prune_rate"] = c.get("zone_blocks_skipped",
+                                                    0) / tot
+                derived["tile_skip_rate"] = (c.get("zone_tiles_skipped", 0)
+                                             / max(1, c.get("zone_tiles_total",
+                                                            0)))
+            rows.append(BenchRow(f"filter_zonemap/{backend}/k{k}",
+                                 dt / k * 1e6, derived))
+        for a, b in zip(out["jax_packed"], out["fused"]):
+            assert np.array_equal(a.keys, b.keys)
+            assert np.array_equal(a.values, b.values)
+    return rows
+
+
 def run_scan_server(n: int = 60_000, width: int = 128, k: int = 16,
                     max_batch: int = 16) -> List[BenchRow]:
     """End-to-end serving path: submit K predicates, drain in batches."""
@@ -170,14 +241,22 @@ def run_scan_server(n: int = 60_000, width: int = 128, k: int = 16,
 
 
 if __name__ == "__main__":
-    if "--batch" in sys.argv:
+    if "--smoke" in sys.argv:
+        # nightly CI leg: small clustered workload exercising zone-map
+        # pruning end to end (fused vs staged, parity asserted inside)
+        for r in run_zonemap(n=20_000, width=32, ks=[1, 16], repeats=1):
+            print(r.csv())
+    elif "--zonemap" in sys.argv:
+        for r in run_zonemap():
+            print(r.csv())
+    elif "--batch" in sys.argv:
         try:
             k = int(sys.argv[sys.argv.index("--batch") + 1])
         except (IndexError, ValueError):
-            sys.exit("usage: bench_filter.py [--batch K]  (K = predicates per batch)")
+            sys.exit("usage: bench_filter.py [--batch K | --zonemap | --smoke]")
         for r in run_batched(ks=[k]) + run_scan_server(k=k, max_batch=k):
             print(r.csv())
     else:
         for r in (run() + run_selectivity() + run_backends()
-                  + run_batched() + run_scan_server()):
+                  + run_batched() + run_zonemap() + run_scan_server()):
             print(r.csv())

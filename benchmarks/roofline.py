@@ -1,5 +1,10 @@
 """Roofline report: reads the dry-run JSON records and renders the
-docs/EXPERIMENTS.md tables (§Dry-run, §Roofline)."""
+docs/EXPERIMENTS.md tables (§Dry-run, §Roofline).
+
+``--scan`` instead runs a live zone-map pruning report: a compressed
+scan is memory-bound, so blocks the fused megakernel skips convert
+directly into modeled device-read seconds saved (the scan-side roofline
+lever; see docs/EXPERIMENTS.md §bench-zonemap)."""
 
 from __future__ import annotations
 
@@ -72,12 +77,54 @@ def summary(recs: List[Dict]) -> str:
     return "\n".join(lines)
 
 
+def scan_pruning_report(n: int = 20_000, width: int = 32) -> str:
+    """Zone-map pruning rates from a live clustered scan, converted to
+    modeled read time saved per device (blocks skipped never need their
+    words fetched — on the modeled devices that is pure bandwidth)."""
+    import dataclasses
+
+    from benchmarks._harness import build_tree
+    from benchmarks.bench_filter import load_tree_clustered
+    from repro.core import Predicate
+    from repro.storage.devices import DEVICES
+
+    tree = build_tree("lsm_opd", width)
+    tree.cfg = dataclasses.replace(tree.cfg, filter_backend="fused")
+    load_tree_clustered(tree, n, width)
+    preds = [Predicate("range", b"ts_%012d" % lo, b"ts_%012d" % (lo + 5))
+             for lo in (100, 2000, 4000)]
+    tree.filter_many(preds)
+    c = tree.filter_stats.counts
+    total, skipped = c["zone_blocks_total"], c["zone_blocks_skipped"]
+    bb = tree.cfg.block_bytes
+    lines = [
+        f"zone-map scan pruning (n={n}, {len(preds)} selective preds, "
+        f"{c['fused_launches']} fused launches)",
+        f"  blocks: {skipped}/{total} skipped "
+        f"({skipped / max(1, total):.1%}; "
+        f"prunable bound {c['zone_blocks_prunable'] / max(1, total):.1%})",
+        f"  tiles:  {c['zone_tiles_skipped']}/{c['zone_tiles_total']} "
+        f"skipped",
+        f"  bytes avoided: {skipped * bb / 2**20:.2f} MiB of "
+        f"{total * bb / 2**20:.2f} MiB",
+        "  modeled read time saved:",
+    ]
+    for name, dev in DEVICES.items():
+        lines.append(f"    {name:9s} {dev.read_seconds(skipped * bb, 0) * 1e3:8.3f} ms")
+    return "\n".join(lines)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--out", default="experiments/dryrun")
     ap.add_argument("--variant", default="base")
     ap.add_argument("--mesh", default="single")
+    ap.add_argument("--scan", action="store_true",
+                    help="live zone-map pruning report instead of dry-run tables")
     args = ap.parse_args()
+    if args.scan:
+        print(scan_pruning_report())
+        return
     recs = load(args.out, args.variant)
     print(table(recs, args.mesh))
     print()

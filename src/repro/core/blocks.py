@@ -15,7 +15,7 @@ Everything is vectorized numpy; the TPU-side batched probe lives in
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
+from typing import Optional, Tuple
 
 import numpy as np
 
@@ -38,7 +38,16 @@ def splitmix64(x: np.ndarray) -> np.ndarray:
 
 @dataclasses.dataclass
 class BlockIndex:
-    """Per-block first/last key + a shared bloom bit array per block."""
+    """Per-block first/last key + a shared bloom bit array per block.
+
+    For 'opd' SCTs the index also carries a per-block **code-range zone
+    map** (``code_lo``/``code_hi``: min/max *packed* field value per 4 KB
+    block, tombstones included as 0 because that is what the packed
+    words store).  The fused scan kernel consults zones per tile to skip
+    whole blocks whose code range cannot intersect any planned
+    predicate range — block-granular pruning directly on the compressed
+    representation (see ``kernels/fused_scan.py``).
+    """
 
     entries_per_block: int
     first_keys: np.ndarray      # uint64 [n_blocks]
@@ -46,14 +55,25 @@ class BlockIndex:
     bloom_words: np.ndarray     # uint32 [n_blocks, words_per_block]
     n_hashes: int
     nbits: int                  # bits per block bloom
+    # code-range zone map ('opd' only; None for other codecs)
+    code_lo: Optional[np.ndarray] = None   # uint32 [n_blocks]
+    code_hi: Optional[np.ndarray] = None   # uint32 [n_blocks]
 
     @property
     def n_blocks(self) -> int:
         return int(self.first_keys.shape[0])
 
     @property
+    def has_zones(self) -> bool:
+        return self.code_lo is not None and self.code_hi is not None
+
+    @property
     def nbytes(self) -> int:
-        return int(self.first_keys.nbytes + self.last_keys.nbytes + self.bloom_words.nbytes)
+        total = int(self.first_keys.nbytes + self.last_keys.nbytes
+                    + self.bloom_words.nbytes)
+        if self.has_zones:
+            total += int(self.code_lo.nbytes + self.code_hi.nbytes)
+        return total
 
     # ------------------------------------------------------------------ #
     @staticmethod
@@ -124,12 +144,61 @@ class BlockIndex:
         return BlockIndex(epb, first, last, bloom, n_hashes, nbits)
 
     # ------------------------------------------------------------------ #
+    # code-range zone map ('opd' codec)
+    # ------------------------------------------------------------------ #
+    def attach_code_zones(self, packed_values: np.ndarray) -> None:
+        """Compute per-block min/max of the *packed* field values.
+
+        ``packed_values`` is the uint32 field value per entry (tombstones
+        appear as 0, exactly as the bit-packed words store them), so the
+        zones describe what the packed-word kernels will actually see —
+        pruning against them is conservative and bit-exact.
+        """
+        n = packed_values.shape[0]
+        nb = self.n_blocks
+        lo = np.full(nb, np.uint32(0xFFFFFFFF), np.uint32)
+        hi = np.zeros(nb, np.uint32)
+        if n:
+            epb = self.entries_per_block
+            edges = np.arange(0, n, epb)
+            lo[: edges.shape[0]] = np.minimum.reduceat(packed_values, edges)
+            hi[: edges.shape[0]] = np.maximum.reduceat(packed_values, edges)
+        self.code_lo, self.code_hi = lo, hi
+
+    def zone_prunable(self, ranges: np.ndarray) -> np.ndarray:
+        """bool [n_blocks]: True where NO inclusive [lo, hi] range in
+        ``ranges`` (uint32 [K, 2]; lo > hi encodes empty) can intersect
+        the block's code zone — the block-granular pruning verdict."""
+        if not self.has_zones:
+            return np.zeros(self.n_blocks, np.bool_)
+        lo = ranges[:, 0][:, None].astype(np.uint64)
+        hi = ranges[:, 1][:, None].astype(np.uint64)
+        z_lo = self.code_lo[None, :].astype(np.uint64)
+        z_hi = self.code_hi[None, :].astype(np.uint64)
+        hit = (lo <= hi) & (lo <= z_hi) & (hi >= z_lo)
+        return ~hit.any(axis=0)
+
+    # ------------------------------------------------------------------ #
     def locate_block(self, key: np.uint64) -> int:
-        """Block that may contain key, or -1 (prunes via key ranges)."""
-        b = int(np.searchsorted(self.last_keys, key, side="left"))
-        if b >= self.n_blocks or self.first_keys[b] > key:
-            return -1
+        """First block that may contain key, or -1 (prunes via key
+        ranges).  A key whose duplicate versions span a block boundary
+        occupies SEVERAL blocks — use ``locate_block_range`` when every
+        candidate matters (snapshot reads may need an older version
+        stored in a later block)."""
+        b, _ = self.locate_block_range(key)
         return b
+
+    def locate_block_range(self, key: np.uint64) -> Tuple[int, int]:
+        """Inclusive [b_lo, b_hi] range of blocks that may contain key,
+        or (-1, -1).  ``searchsorted(last_keys, key, 'left')`` alone
+        finds only the FIRST candidate; duplicate versions of a key that
+        span a block boundary continue into every following block whose
+        first key is still <= key."""
+        b_lo = int(np.searchsorted(self.last_keys, key, side="left"))
+        if b_lo >= self.n_blocks or self.first_keys[b_lo] > key:
+            return -1, -1
+        b_hi = int(np.searchsorted(self.first_keys, key, side="right")) - 1
+        return b_lo, max(b_lo, b_hi)
 
     def may_contain(self, block: int, key: np.uint64) -> bool:
         nbits = np.uint64(self.nbits)
@@ -142,8 +211,17 @@ class BlockIndex:
         return True
 
     def probe(self, key: np.uint64) -> Tuple[int, bool]:
-        """(block, may_contain) combined key-range + bloom probe."""
-        b = self.locate_block(key)
-        if b < 0:
-            return -1, False
-        return b, self.may_contain(b, key)
+        """(first block, may_contain) combined key-range + bloom probe."""
+        b, _, maybe = self.probe_range(key)
+        return b, maybe
+
+    def probe_range(self, key: np.uint64) -> Tuple[int, int, bool]:
+        """(b_lo, b_hi, may_contain) over the FULL candidate block range:
+        the bloom verdict is the OR across every block the key's
+        versions could occupy, so a version stored past a block boundary
+        is never bloom-pruned away."""
+        b_lo, b_hi = self.locate_block_range(key)
+        if b_lo < 0:
+            return -1, -1, False
+        maybe = any(self.may_contain(b, key) for b in range(b_lo, b_hi + 1))
+        return b_lo, b_hi, maybe

@@ -42,23 +42,46 @@ from repro.storage.io import FileStore
 
 
 def string_mask(values: np.ndarray, pred: Predicate) -> np.ndarray:
-    """Vectorized predicate over raw fixed-width strings (C_S * S_V * N)."""
+    """Vectorized predicate over raw fixed-width strings (C_S * S_V * N).
+
+    Operands longer than the value width need care: the ``S{w}`` cast
+    silently truncates, and a truncated operand compares equal to values
+    it should NOT match.  'eq'/'prefix' with an over-long operand match
+    nothing; an over-long *lower* bound must exclude its own truncation
+    (v == a[:w] < a because a is longer); an over-long *upper* bound is
+    truncation-safe (v == b[:w] < b, so v <= b still holds).  Mirrors
+    ``OPD.code_range`` so every codec plans identically.
+    """
     w = values.dtype.itemsize
     if pred.kind == "eq":
+        if len(pred.a) > w:
+            return np.zeros(values.shape[0], np.bool_)
         return values == np.asarray([pred.a], f"S{w}")[0]
     if pred.kind == "prefix":
+        if len(pred.a) > w:
+            # b"\xff" * (w - len(pred.a)) goes negative -> b"", and the
+            # truncated cast used to match values equal to the truncated
+            # prefix; no w-byte value has a longer-than-w prefix
+            return np.zeros(values.shape[0], np.bool_)
         lo = np.asarray([pred.a], f"S{w}")[0]
         hi = np.asarray([pred.a + b"\xff" * (w - len(pred.a))], f"S{w}")[0]
         return (values >= lo) & (values <= hi)
     if pred.kind == "range":
-        lo = np.asarray([pred.a], f"S{w}")[0]
-        hi = np.asarray([pred.b], f"S{w}")[0]
-        return (values >= lo) & (values <= hi)
+        return _lower_mask(values, pred.a) & \
+            (values <= np.asarray([pred.b], f"S{w}")[0])
     if pred.kind == "ge":
-        return values >= np.asarray([pred.a], f"S{w}")[0]
+        return _lower_mask(values, pred.a)
     if pred.kind == "le":
         return values <= np.asarray([pred.b], f"S{w}")[0]
     raise ValueError(pred.kind)
+
+
+def _lower_mask(values: np.ndarray, a: bytes) -> np.ndarray:
+    """``value >= a`` (truncation-aware: an over-long bound excludes
+    values equal to its truncation)."""
+    w = values.dtype.itemsize
+    bound = np.asarray([a], f"S{w}")[0]
+    return values > bound if len(a) > w else values >= bound
 
 
 @dataclasses.dataclass
@@ -78,13 +101,15 @@ def evaluate_filter(
     store: FileStore,
     blob_mgr: Optional[BlobManager] = None,
     snapshot_seqno: Optional[int] = None,
-    backend: str = "numpy",  # 'numpy' | 'jax' | 'jax_packed'
+    backend: str = "numpy",  # 'numpy' | 'jax' | 'jax_packed' | 'fused'
+    value_width: Optional[int] = None,
 ) -> FilterResult:
     """Single-predicate filter — the K=1 case of ``evaluate_filter_many``."""
     return evaluate_filter_many(
         runs, memtable, [pred],
         stats=stats, store=store, blob_mgr=blob_mgr,
         snapshot_seqno=snapshot_seqno, backend=backend,
+        value_width=value_width,
     )[0]
 
 
@@ -97,7 +122,8 @@ def evaluate_filter_many(
     store: FileStore,
     blob_mgr: Optional[BlobManager] = None,
     snapshot_seqno: Optional[int] = None,
-    backend: str = "numpy",  # 'numpy' | 'jax' | 'jax_packed'
+    backend: str = "numpy",  # 'numpy' | 'jax' | 'jax_packed' | 'fused'
+    value_width: Optional[int] = None,
 ) -> List[FilterResult]:
     """Evaluate K predicates with one pass over every run's value column.
 
@@ -105,6 +131,17 @@ def evaluate_filter_many(
     independent ``evaluate_filter`` calls; only the run-level costs
     (file read, 'heavy' decompression, 'blob' addressing, packed-word
     field extraction) are paid once instead of K times.
+
+    The 'fused' backend additionally batches ACROSS runs: every 'opd'
+    run of a level goes through ONE ``kernels.ops.fused_level_filter``
+    launch (zone-gated; see ``_fused_level_masks``), so launch count is
+    per level, not per run.
+
+    ``value_width`` pins the dtype of empty results.  Without it an
+    empty ``FilterResult`` falls back to the width of the first live run
+    (or 8 when no runs survive), which drifts from the tree's configured
+    width and breaks concatenation in scatter-gather merges — callers
+    that know the tree config (``LSMTree.filter*``) always pass it.
     """
     preds = list(preds)
     n_preds = len(preds)
@@ -137,13 +174,18 @@ def evaluate_filter_many(
     cand_vals = [[] for _ in range(n_preds)]
     n_scanned = 0
     with stats.time("filter"):
+        fused_masks = (_fused_level_masks(live_runs, preds, stats)
+                       if backend == "fused" else {})
         for i, s in enumerate(live_runs):
             n_scanned += s.n
             if s.codec == "opd":
-                # K x O(log D) planning on the dictionary, then ONE
-                # column pass evaluating every planned code range.
-                ranges = [s.opd.code_range(p) for p in preds]
-                masks = _code_masks_many(s, ranges, backend)
+                if backend == "fused":
+                    masks = fused_masks[i]
+                else:
+                    # K x O(log D) planning on the dictionary, then ONE
+                    # column pass evaluating every planned code range.
+                    ranges = [s.opd.code_range(p) for p in preds]
+                    masks = _code_masks_many(s, ranges, backend)
             else:
                 vals = s.values if s.codec == "plain" else decoded[i]
                 base = ~s.tombs
@@ -168,7 +210,7 @@ def evaluate_filter_many(
         # walked once per memtable.  Rows shadowed by a newer memtable
         # (or run) are discarded by the seqno merge below, so simply
         # concatenating every memtable's newest-visible rows is correct.
-        mk, ms, mv = _memtable_visible(mems, snap)
+        mk, ms, mv = _memtable_visible(mems, snap, value_width)
         if mk.shape[0]:
             for q, p in enumerate(preds):
                 m = string_mask(mv, p)
@@ -188,7 +230,7 @@ def evaluate_filter_many(
         for q in range(n_preds):
             results.append(_merge_candidates(
                 cand_keys[q], cand_seqs[q], cand_vals[q],
-                live_runs, mem_newest, snap, n_scanned))
+                live_runs, mem_newest, snap, n_scanned, value_width))
     return results
 
 
@@ -200,10 +242,15 @@ def _merge_candidates(
     mem_newest: Optional[Tuple[np.ndarray, np.ndarray]],
     snap,
     n_scanned: int,
+    value_width: Optional[int] = None,
 ) -> FilterResult:
     """Cross-level merge for one predicate's candidates (paper step 4)."""
     if not cand_keys:
-        w = live_runs[0].value_width if live_runs else 8
+        # empty result still needs the RIGHT dtype: scatter-gather merge
+        # concatenates per-shard values, and a width-8 fallback from an
+        # empty shard poisons the concatenation
+        w = value_width if value_width is not None else (
+            live_runs[0].value_width if live_runs else 8)
         return FilterResult(np.zeros(0, np.uint64), np.zeros(0, f"S{w}"), n_scanned, 0)
     keys = np.concatenate(cand_keys)
     seqs = np.concatenate(cand_seqs)
@@ -268,6 +315,67 @@ def _code_masks_many(
     raise ValueError(backend)
 
 
+def _fused_level_masks(
+    live_runs: List[SCT], preds: Sequence[Predicate], stats: StageStats,
+) -> dict:
+    """The 'fused' backend: plan + evaluate every 'opd' run through the
+    zone-mapped megakernel, ONE launch per level.
+
+    Runs are grouped by ``(level, pack_width)`` — the pack width is a
+    static kernel parameter, and within a level it is uniform in
+    practice (the level was written by one flush/compaction policy).
+    Each run contributes its own K planned [lo, hi] ranges to the
+    group's concatenated range table, so runs with *different
+    dictionaries* still share the launch.  Per-block code zones from
+    ``BlockIndex`` gate each tile in-kernel; pruning telemetry lands in
+    ``stats.counts`` (``fused_launches``, ``zone_tiles_*``,
+    ``zone_blocks_*``) for the bench reports.
+
+    Returns {run index -> K bool masks}, bit-identical to the
+    'jax_packed'/'numpy' backends for every run.
+    """
+    from repro.kernels import ops as kops
+
+    groups: dict = {}
+    for i, s in enumerate(live_runs):
+        if s.codec == "opd":
+            groups.setdefault((s.level, s.code_bits), []).append(i)
+    out: dict = {}
+    for (_level, width), idxs in sorted(groups.items()):
+        ranges_list, zones_list = [], []
+        for i in idxs:
+            s = live_runs[i]
+            rr = [s.opd.code_range(p) for p in preds]
+            # inclusive [lo, hi-1]; lo > hi encodes empty in-kernel
+            ranges_list.append(np.asarray(
+                [(lo, hi - 1) if lo < hi else (1, 0) for lo, hi in rr],
+                np.uint32))
+            b = s.blocks
+            zones_list.append(
+                (b.code_lo, b.code_hi, b.entries_per_block)
+                if b is not None and b.has_zones else None)
+        if all((r[:, 0] > r[:, 1]).all() for r in ranges_list):
+            # no predicate can match anywhere in this level: skip the
+            # launch entirely (keeps fused_launches honest)
+            for i in idxs:
+                out[i] = [np.zeros(live_runs[i].n, np.bool_) for _ in preds]
+            continue
+        bitmaps, info = kops.fused_level_filter(
+            [live_runs[i].packed for i in idxs],
+            [live_runs[i].n for i in idxs],
+            ranges_list, zones_list, width)
+        stats.counts["fused_launches"] += 1
+        for k in ("tiles_total", "tiles_skipped", "blocks_total",
+                  "blocks_skipped", "blocks_prunable"):
+            stats.counts[f"zone_{k}"] += info[k]
+        for j, i in enumerate(idxs):
+            s = live_runs[i]
+            live = ~s.tombs  # tombstones pack as 0: mask out of bitmap
+            out[i] = [kops.bitmap_to_mask(bitmaps[j][k], width, s.n) & live
+                      for k in range(len(preds))]
+    return out
+
+
 def _read_blob_values(s: SCT, blob_mgr: BlobManager) -> np.ndarray:
     """BlobDB filter path: random value addressing per entry (paper §5.3)."""
     out = np.zeros(s.n, f"S{s.value_width}")
@@ -278,7 +386,8 @@ def _read_blob_values(s: SCT, blob_mgr: BlobManager) -> np.ndarray:
     return out
 
 
-def _memtable_visible(mems: List[MemTable], snap) -> Tuple:
+def _memtable_visible(mems: List[MemTable], snap,
+                      value_width: Optional[int] = None) -> Tuple:
     """Newest visible live (key, seqno, value) triples across the
     memtable stack — one locked columnar pass per memtable, predicates
     mask after.  Rows a newer memtable shadows are included; the seqno
@@ -287,7 +396,8 @@ def _memtable_visible(mems: List[MemTable], snap) -> Tuple:
              for m in mems if m.n_versions]
     parts = [(k[~t], s[~t], v[~t]) for k, s, t, v in parts]
     parts = [p for p in parts if p[0].shape[0]]
-    w = mems[0].value_width if mems else 8
+    w = value_width if value_width is not None else (
+        mems[0].value_width if mems else 8)
     if not parts:
         return (np.zeros(0, np.uint64), np.zeros(0, np.uint64),
                 np.zeros(0, f"S{w}"))

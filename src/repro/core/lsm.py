@@ -80,7 +80,7 @@ class LSMConfig:
     max_levels: int = 7
     blob_compress: bool = False        # BlobDB + dictionary compression
     blob_gc_threshold: float = 0.5
-    filter_backend: str = "numpy"      # 'numpy' | 'jax' | 'jax_packed'
+    filter_backend: str = "numpy"      # 'numpy' | 'jax' | 'jax_packed' | 'fused'
     compaction_backend: str = "numpy"  # 'numpy' | 'jax' | 'jax_packed'
     # --- maintenance pipeline (docs/DESIGN.md §9) ---
     maintenance: str = "sync"          # 'sync' | 'background'
@@ -787,15 +787,26 @@ class LSMTree:
             for s in runs:
                 if s.n == 0 or not (s.min_key <= key <= s.max_key):
                     continue
-                blk, maybe = s.blocks.probe(k)
+                # duplicate versions of a key can SPAN a block boundary:
+                # probe_range blooms every candidate block (not just the
+                # first) so an older version stored past the boundary is
+                # never pruned away
+                _b_lo, _b_hi, maybe = s.blocks.probe_range(k)
                 if not maybe:
                     continue
                 # the block is fetched to search it: charge the read now,
                 # whether or not the key is present (bloom false
                 # positives are real I/O, not free)
                 self.store.stats.add_read(self.cfg.block_bytes, 1)
+                epb = s.blocks.entries_per_block
                 pos = int(np.searchsorted(s.keys, k, side="left"))
+                cur_blk = pos // epb
                 while pos < s.n and s.keys[pos] == k:
+                    if pos // epb != cur_blk:
+                        # snapshot walk crossed into the next block:
+                        # that fetch is real I/O too
+                        cur_blk = pos // epb
+                        self.store.stats.add_read(self.cfg.block_bytes, 1)
                     if snap_seq is None or s.seqnos[pos] <= snap_seq:
                         if s.tombs[pos]:
                             return None
@@ -834,18 +845,21 @@ class LSMTree:
             snap.runs, snap.mems, pred,
             stats=self.filter_stats, store=self.store, blob_mgr=self.blob_mgr,
             snapshot_seqno=snap.seqno, backend=self.cfg.filter_backend,
+            value_width=self.cfg.value_width,
         )
 
     def filter_many(self, preds: List[Predicate],
                     snapshot: Optional[Snapshot] = None) -> List[FilterResult]:
         """Batched filter: all predicates share one pass over every run
-        (and, on 'jax_packed', one ``multi_filter`` kernel launch per
-        run), against a single consistent snapshot."""
+        (on 'jax_packed', one ``multi_filter`` kernel launch per run; on
+        'fused', one zone-gated ``fused_level_filter`` launch per LEVEL),
+        against a single consistent snapshot."""
         snap = snapshot or self.snapshot()
         return evaluate_filter_many(
             snap.runs, snap.mems, preds,
             stats=self.filter_stats, store=self.store, blob_mgr=self.blob_mgr,
             snapshot_seqno=snap.seqno, backend=self.cfg.filter_backend,
+            value_width=self.cfg.value_width,
         )
 
     # ------------------------------------------------------------------ #

@@ -146,10 +146,21 @@ class OPD:
     # predicate -> code-range transform (paper §4.2.2, O(log D))
     # ------------------------------------------------------------------ #
     def code_range(self, pred: Predicate) -> Tuple[int, int]:
-        """Return [lo, hi) such that pred holds iff lo <= code < hi."""
+        """Return [lo, hi) such that pred holds iff lo <= code < hi.
+
+        Operands longer than the value width need care: ``np.asarray(x,
+        "S{w}")`` silently truncates, and a truncated operand compares
+        equal to values it should NOT match.  An over-long 'eq'/'prefix'
+        operand matches nothing (stored values are at most w bytes); an
+        over-long *lower* bound excludes its own truncation (v ==
+        a[:w] < a because a is longer); an over-long *upper* bound is
+        truncation-safe (v == b[:w] < b, so v <= b still holds).
+        """
         w = self.width
         vals = self.values
         if pred.kind == "eq":
+            if len(pred.a) > w:
+                return 0, 0
             a = np.asarray([pred.a], dtype=f"S{w}")
             lo = int(np.searchsorted(vals, a[0], side="left"))
             hi = int(np.searchsorted(vals, a[0], side="right"))
@@ -157,6 +168,11 @@ class OPD:
         if pred.kind == "prefix":
             if len(pred.a) == 0:
                 return 0, self.size
+            if len(pred.a) > w:
+                # no w-byte value can start with a longer-than-w prefix;
+                # the truncated cast used to over-match values equal to
+                # the truncated prefix
+                return 0, 0
             lo_key = np.asarray([pred.a], dtype=f"S{w}")[0]
             hi_raw = pred.a + b"\xff" * (w - len(pred.a))
             hi_key = np.asarray([hi_raw], dtype=f"S{w}")[0]
@@ -164,16 +180,22 @@ class OPD:
             hi = int(np.searchsorted(vals, hi_key, side="right"))
             return lo, hi
         if pred.kind == "range":
-            lo = int(np.searchsorted(vals, np.asarray([pred.a], f"S{w}")[0], "left"))
+            lo = self._lower_code(pred.a)
             hi = int(np.searchsorted(vals, np.asarray([pred.b], f"S{w}")[0], "right"))
             return lo, hi
         if pred.kind == "ge":
-            lo = int(np.searchsorted(vals, np.asarray([pred.a], f"S{w}")[0], "left"))
-            return lo, self.size
+            return self._lower_code(pred.a), self.size
         if pred.kind == "le":
             hi = int(np.searchsorted(vals, np.asarray([pred.b], f"S{w}")[0], "right"))
             return 0, hi
         raise ValueError(f"bad predicate kind {pred.kind!r}")
+
+    def _lower_code(self, a: bytes) -> int:
+        """First code satisfying ``value >= a`` (truncation-aware: an
+        over-long bound must exclude values equal to its truncation)."""
+        w = self.width
+        side = "right" if len(a) > w else "left"
+        return int(np.searchsorted(self.values, np.asarray([a], f"S{w}")[0], side))
 
     # ------------------------------------------------------------------ #
     # Algorithm 1 support: dictionary merge + index tables

@@ -343,14 +343,20 @@ def build_sct(
     if codec == "opd":
         if packed_encoded is not None:
             packed, width, opd = packed_encoded
+            # zone map over what the packed words actually hold
+            # (tombstones as 0) — one build-time unpack, no column kept
+            field_vals = bitunpack(packed, width, n).astype(np.uint32)
         else:
             if encoded is not None:
                 evs, opd = encoded
             else:
                 evs, opd = _opd_encode(raw_values, tombs)
             width = pack_width(opd.code_bits)
+            field_vals = np.clip(evs, 0, None).astype(np.uint32)
             packed = bitpack(np.clip(evs, 0, None), width)
             sct.evs = evs
+        sct.blocks.attach_code_zones(field_vals)
+        meta_overhead = sct.blocks.nbytes
         sct.packed, sct.code_bits, sct.opd = packed, width, opd
         disk = n * (key_bytes + SEQNO_BYTES) + packed.nbytes + opd.nbytes + meta_overhead
     elif codec == "plain":

@@ -17,6 +17,7 @@ import numpy as np
 
 from repro.kernels import bitpack as _bitpack
 from repro.kernels import bloom_probe as _bloom
+from repro.kernels import fused_scan as _fused
 from repro.kernels import merge_remap as _merge_remap
 from repro.kernels import multi_filter as _multi_filter
 from repro.kernels import opd_filter as _opd_filter
@@ -96,6 +97,110 @@ def multi_range_filter_packed(words, width: int, ranges,
     bitmaps, _ = _multi_filter.multi_range_filter_packed_2d(
         flat, ranges, width=width, block_rows=block_rows, interpret=INTERPRET)
     return np.asarray(bitmaps).reshape(ranges.shape[0], -1)[:, :m]
+
+
+# --------------------------------------------------------------------------- #
+# fused_scan: one zone-gated launch over every SCT of a level
+# --------------------------------------------------------------------------- #
+def fused_level_filter(
+    packed_list, n_list, ranges_list, zones_list, width: int,
+    block_rows: int = _fused.DEFAULT_BLOCK_ROWS,
+):
+    """ONE kernel launch evaluating K code ranges over S packed columns.
+
+    Per-SCT word columns are padded to tile boundaries (``block_rows`` x
+    128 words) with 0xFFFFFFFF and concatenated; each tile carries an
+    SMEM meta row ``(zone_lo, zone_hi, range_base)`` where the zone is
+    the min/max packed code over the 4 KB blocks the tile covers and
+    ``range_base = s_idx * K`` indexes the concatenated [S*K, 2] range
+    table — so SCTs with different dictionaries (different planned
+    ranges) share the single grid.  The kernel skips whole tiles whose
+    zone no range intersects.
+
+      packed_list: per-SCT uint32 packed words (s.packed)
+      n_list:      per-SCT entry counts
+      ranges_list: per-SCT uint32 [K, 2] inclusive [lo, hi]; lo > hi empty
+      zones_list:  per-SCT (code_lo, code_hi, entries_per_block) or None
+                   (no zones -> tiles marked always-hit, never pruned)
+
+    Returns (bitmaps, info): bitmaps[s] is uint32 [K, n_words_s] aligned
+    with packed_list[s] (bit-identical to ``multi_range_filter_packed``
+    per SCT); info counts tiles/blocks skipped for StageStats.
+    """
+    per = 32 // width
+    tile_words = block_rows * LANES
+    tile_entries = tile_words * per
+    n_preds = int(np.asarray(ranges_list[0], np.uint32).reshape(-1, 2).shape[0])
+    chunks, metas, seg_words, seg_tiles = [], [], [], []
+    for s_idx, (packed, n, zones) in enumerate(
+            zip(packed_list, n_list, zones_list)):
+        words = np.asarray(packed, np.uint32).reshape(-1)
+        m = words.shape[0]
+        n_tiles = max(1, -(-m // tile_words))
+        pad = np.full(n_tiles * tile_words, 0xFFFFFFFF, np.uint32)
+        pad[:m] = words
+        chunks.append(pad)
+        seg_words.append(m)
+        seg_tiles.append(n_tiles)
+        meta = np.zeros((n_tiles, _fused.META_COLS), np.uint32)
+        meta[:, 2] = s_idx * n_preds
+        if zones is None or m == 0:
+            # no zone map: every tile is a forced hit (full evaluation)
+            meta[:, 0], meta[:, 1] = 0, 0xFFFFFFFF
+        else:
+            code_lo, code_hi, epb = zones
+            for t in range(n_tiles):
+                e0 = t * tile_entries
+                e1 = min(int(n), (t + 1) * tile_entries)
+                if e0 >= e1:  # padding-only tile: always skipped
+                    meta[t, 0], meta[t, 1] = _fused.EMPTY_ZONE
+                    continue
+                b0, b1 = e0 // epb, (e1 - 1) // epb
+                meta[t, 0] = code_lo[b0:b1 + 1].min()
+                meta[t, 1] = code_hi[b0:b1 + 1].max()
+        metas.append(meta)
+    words_all = np.concatenate(chunks).reshape(-1, LANES)
+    meta_all = np.concatenate(metas)
+    ranges_all = np.concatenate(
+        [np.asarray(r, np.uint32).reshape(-1, 2) for r in ranges_list])
+    bitmaps2, hits2 = _fused.fused_zone_filter_2d(
+        jnp.asarray(words_all), jnp.asarray(meta_all), jnp.asarray(ranges_all),
+        width=width, n_preds=n_preds, block_rows=block_rows,
+        interpret=INTERPRET)
+    flat = np.asarray(bitmaps2).reshape(n_preds, -1)
+    hit = np.asarray(hits2).reshape(-1).astype(bool)
+
+    bitmaps, info = [], {
+        "tiles_total": int(hit.shape[0]),
+        "tiles_skipped": int((~hit).sum()),
+        "blocks_total": 0, "blocks_skipped": 0, "blocks_prunable": 0,
+    }
+    w_off = t_off = 0
+    for s_idx, (m, n_tiles) in enumerate(zip(seg_words, seg_tiles)):
+        bitmaps.append(flat[:, w_off:w_off + m])
+        zones = zones_list[s_idx]
+        if zones is not None:
+            code_lo, code_hi, epb = zones
+            nb = int(code_lo.shape[0])
+            info["blocks_total"] += nb
+            # a block is skipped iff EVERY tile overlapping it was
+            skipped_t = ~hit[t_off:t_off + n_tiles]
+            b = np.arange(nb, dtype=np.int64)
+            t0 = (b * epb) // tile_entries
+            t1 = np.minimum(((b + 1) * epb - 1) // tile_entries, n_tiles - 1)
+            cs = np.concatenate([[0], np.cumsum(skipped_t)])
+            info["blocks_skipped"] += int(
+                ((cs[t1 + 1] - cs[t0]) == (t1 - t0 + 1)).sum())
+            # block-granular verdict (upper bound on achievable skips)
+            rng = np.asarray(ranges_list[s_idx], np.uint32).reshape(-1, 2)
+            lo = rng[:, 0].astype(np.uint64)[:, None]
+            hi = rng[:, 1].astype(np.uint64)[:, None]
+            hit_b = ((lo <= hi) & (lo <= code_hi[None, :].astype(np.uint64))
+                     & (hi >= code_lo[None, :].astype(np.uint64)))
+            info["blocks_prunable"] += int((~hit_b.any(axis=0)).sum())
+        w_off += n_tiles * tile_words
+        t_off += n_tiles
+    return bitmaps, info
 
 
 def bitmap_to_mask(bitmap: np.ndarray, width: int, n: int) -> np.ndarray:

@@ -107,6 +107,54 @@ def multi_range_filter_packed(words: jax.Array, width: int,
 
 
 # --------------------------------------------------------------------------- #
+# fused_scan: zone-gated K-predicate filter over tile-aligned segments
+# --------------------------------------------------------------------------- #
+def fused_zone_filter(words: jax.Array, meta: jax.Array, ranges: jax.Array,
+                      width: int, n_preds: int, block_rows: int):
+    """Oracle for ``fused_scan.fused_zone_filter_2d``.
+
+    Per tile i (``block_rows`` word rows), the meta row gives the tile's
+    packed-code zone [z_lo, z_hi] and its base offset into the
+    per-(segment, predicate) range table.  A tile whose zone intersects
+    no planned range is SKIPPED (bitmap zeros, hit 0); otherwise the
+    tile's bitmap row k equals ``range_filter_packed`` of the tile's
+    words against ranges[base + k].  Zone pruning must be
+    correctness-invisible: for sound zones (z_lo/z_hi really bound every
+    packed field in the tile) a skipped tile contains no matches, so the
+    full bitmap equals the unpruned ``multi_range_filter_packed`` of
+    each segment — the executor-level differential tests assert exactly
+    that.
+    """
+    lanes = words.shape[1]
+    n_tiles = meta.shape[0]
+    bitmap_tiles = []
+    hits = []
+    for i in range(n_tiles):  # python loop: oracle clarity over speed
+        z_lo, z_hi = meta[i, 0], meta[i, 1]
+        base = int(meta[i, 2])
+        tile = words[i * block_rows:(i + 1) * block_rows]
+        rows = []
+        hit = False
+        for k in range(n_preds):
+            lo, hi = ranges[base + k, 0], ranges[base + k, 1]
+            if bool(jnp.logical_and(lo <= hi,
+                                    jnp.logical_and(lo <= z_hi,
+                                                    hi >= z_lo))):
+                hit = True
+        for k in range(n_preds):
+            lo, hi = ranges[base + k, 0], ranges[base + k, 1]
+            if hit:
+                rows.append(range_filter_packed(tile, width, lo, hi))
+            else:
+                rows.append(jnp.zeros((block_rows, lanes), jnp.uint32))
+        bitmap_tiles.append(jnp.stack(rows, axis=0))
+        hits.append(1 if hit else 0)
+    bitmaps = jnp.concatenate(bitmap_tiles, axis=1) if bitmap_tiles else \
+        jnp.zeros((n_preds, 0, lanes), jnp.uint32)
+    return bitmaps, jnp.asarray(hits, jnp.int32).reshape(-1, 1)
+
+
+# --------------------------------------------------------------------------- #
 # bloom_probe: batched block-bloom membership probe
 # --------------------------------------------------------------------------- #
 BLOOM_SEEDS32 = (0x9E3779B9, 0x85EBCA6B, 0xC2B2AE35, 0x27D4EB2F, 0x165667B1, 0x9E377969)

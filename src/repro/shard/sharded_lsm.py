@@ -456,9 +456,14 @@ class ShardedLSM:
         the single tree's result through bit-identically."""
         if len(results) == 1:
             return results[0]
+        want = np.dtype(f"S{self.cfg.value_width}")
+        # every shard tree is built with cfg.value_width and threads it
+        # through to empty results — a mismatch here means a shard fell
+        # back to a default width and would silently truncate on concat
+        assert all(r.values.dtype == want for r in results), \
+            [r.values.dtype for r in results]
         keys = np.concatenate([r.keys for r in results])
-        vals = np.concatenate([r.values for r in results]).astype(
-            f"S{self.cfg.value_width}")
+        vals = np.concatenate([r.values for r in results]).astype(want)
         return FilterResult(
             keys, vals,
             n_scanned=sum(r.n_scanned for r in results),

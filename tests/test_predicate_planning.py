@@ -1,0 +1,177 @@
+"""Predicate-planning edge cases (paper §4.2.2) — property suite.
+
+The planner has two independent implementations that must agree with
+each other AND with the bytes-level reference ``Predicate.matches``:
+
+* ``OPD.code_range`` — predicate -> [lo, hi) code range (opd codec);
+* ``filter_exec.string_mask`` — vectorized predicate over raw strings
+  (plain/heavy/blob codecs).
+
+The historical bugs all lived at the width boundary: numpy's ``S{w}``
+cast silently truncates operands longer than the value width, so a
+truncated 'eq'/'prefix' operand over-matched values equal to its
+truncation, and a truncated lower bound failed to exclude it.  The
+suite sweeps the edges named in the issue — empty prefix, prefix ==
+width, prefix > width, empty range, full-domain range — plus random
+operands straddling the width, and asserts bit-identity across the
+numpy / jax / jax_packed / fused backends end-to-end.
+"""
+
+import numpy as np
+import pytest
+from _hypothesis import given, settings, st
+
+from repro.core import LSMConfig, LSMTree, Predicate
+from repro.core.filter_exec import string_mask
+from repro.core.opd import OPD, as_fixed_bytes
+
+W = 6  # value width under test: small so operands straddle it easily
+
+
+def _domain(rng, ndv=40):
+    """Sorted unique values of width W over a tiny alphabet, so random
+    operands collide with stored values and their truncations often."""
+    raw = [bytes(rng.choice([97, 98, 99], rng.integers(1, W + 1)))
+           for _ in range(ndv)]
+    return np.unique(as_fixed_bytes(raw, W))
+
+
+def _reference_mask(values: np.ndarray, pred: Predicate) -> np.ndarray:
+    """Ground truth: python-bytes ``Predicate.matches`` per value."""
+    return np.asarray([pred.matches(bytes(v)) for v in values], np.bool_)
+
+
+def _assert_planner_consistent(values: np.ndarray, pred: Predicate):
+    """code_range and string_mask both equal the bytes-level reference."""
+    opd = OPD(values)
+    lo, hi = opd.code_range(pred)
+    assert 0 <= lo <= hi <= opd.size, (pred, lo, hi)
+    codes = np.arange(opd.size)
+    got_range = (codes >= lo) & (codes < hi)
+    want = _reference_mask(values, pred)
+    assert np.array_equal(got_range, want), (pred, lo, hi)
+    got_mask = string_mask(values, pred)
+    assert np.array_equal(got_mask, want), pred
+
+
+# --------------------------------------------------------------------------- #
+# the named edge cases, exhaustively
+# --------------------------------------------------------------------------- #
+EDGE_PREDS = [
+    Predicate("prefix", b""),                       # empty prefix: all
+    Predicate("prefix", b"a" * W),                  # prefix == width
+    Predicate("prefix", b"a" * (W + 1)),            # prefix > width: none
+    Predicate("prefix", b"a" * (W + 7)),
+    Predicate("eq", b"a" * (W + 1)),                # eq > width: none
+    Predicate("eq", b"ab"),
+    Predicate("range", b"b", b"a"),                 # empty range (b < a)
+    Predicate("range", b"", b"\xff" * W),           # full-domain range
+    Predicate("range", b"a" * (W + 1), b"c" * W),   # over-long lower bound
+    Predicate("range", b"a", b"b" * (W + 3)),       # over-long upper bound
+    Predicate("ge", b""),                           # full domain
+    Predicate("ge", b"ab" + b"a" * W),              # over-long lower bound
+    Predicate("le", b"", b""),                      # only the empty value
+    Predicate("le", b"", b"b" * (W + 2)),           # over-long upper bound
+]
+
+
+@pytest.mark.parametrize("pred", EDGE_PREDS,
+                         ids=[f"{p.kind}-{len(p.a)}-{len(p.b)}"
+                              for p in EDGE_PREDS])
+def test_edge_predicates_planner_consistent(pred):
+    rng = np.random.default_rng(0)
+    values = _domain(rng)
+    _assert_planner_consistent(values, pred)
+
+
+def test_overlong_prefix_regression():
+    """The historical over-match: ``prefix b'abcdefg'`` over width 6
+    truncates to b'abcdef' and used to match the stored value
+    b'abcdef'.  It must match nothing — no 6-byte value has a 7-byte
+    prefix."""
+    values = np.unique(as_fixed_bytes([b"abcdef", b"abcde", b"abd"], W))
+    over = Predicate("prefix", b"abcdefg")
+    assert OPD(values).code_range(over) == (0, 0)
+    assert not string_mask(values, over).any()
+    # over-long eq: same trap, same answer
+    assert OPD(values).code_range(Predicate("eq", b"abcdefg")) == (0, 0)
+    # over-long LOWER bound: v == truncation must be excluded...
+    lo, hi = OPD(values).code_range(Predicate("ge", b"abcdefg"))
+    assert bytes(values[lo - 1]).rstrip(b"\x00") == b"abcdef" if lo else True
+    assert not ((values == b"abcdef") & string_mask(
+        values, Predicate("ge", b"abcdefg"))).any()
+    # ...but an over-long UPPER bound still includes it (abcdef < abcdefg)
+    m = string_mask(values, Predicate("le", b"", b"abcdefg"))
+    assert m[np.nonzero(values == b"abcdef")[0][0]]
+
+
+@pytest.mark.parametrize("codec", ["opd", "plain", "heavy", "blob"])
+def test_overlong_prefix_cross_codec(codec):
+    """End-to-end: every codec returns zero matches for an over-long
+    prefix/eq and excludes the truncation from an over-long lower
+    bound."""
+    vw = 8
+    t = LSMTree(LSMConfig(codec=codec, value_width=vw))
+    t.put(1, b"abcdefgh")   # == width
+    t.put(2, b"abcd")
+    t.put(3, b"zz")
+    t.flush()
+    assert t.filter(Predicate("prefix", b"abcdefghi")).keys.shape == (0,)
+    assert t.filter(Predicate("eq", b"abcdefghi")).keys.shape == (0,)
+    ge = t.filter(Predicate("ge", b"abcdefghi"))
+    assert ge.keys.tolist() == [3]  # NOT key 1 (== the truncation)
+    le = t.filter(Predicate("le", b"", b"abcdefghi"))
+    assert sorted(le.keys.tolist()) == [1, 2]  # key 1 IS <= the bound
+
+
+# --------------------------------------------------------------------------- #
+# property: random operands straddling the width, all engine backends
+# --------------------------------------------------------------------------- #
+def _rand_pred(rng) -> Predicate:
+    kind = ["eq", "prefix", "range", "ge", "le"][int(rng.integers(0, 5))]
+    op = lambda: bytes(rng.choice([97, 98, 99],
+                                  rng.integers(0, W + 4)))  # 0 .. W+3 bytes
+    if kind == "range":
+        return Predicate("range", op(), op())
+    if kind == "le":
+        return Predicate("le", b"", op())
+    return Predicate(kind, op())
+
+
+@given(st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=40, deadline=None)
+def test_planner_property_random_operands(seed):
+    rng = np.random.default_rng(seed)
+    values = _domain(rng, ndv=int(rng.integers(2, 60)))
+    for _ in range(8):
+        _assert_planner_consistent(values, _rand_pred(rng))
+
+
+@given(st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=8, deadline=None)
+def test_backends_bit_identical_on_edges(seed):
+    """numpy / jax / jax_packed / fused agree on the edge batch against
+    one identically-loaded tree each."""
+    rng = np.random.default_rng(seed)
+    n = 800
+    keys = rng.integers(0, 500, n)
+    vals = [bytes(rng.choice([97, 98, 99], rng.integers(1, W + 1)))
+            for _ in range(n)]
+    preds = EDGE_PREDS + [_rand_pred(rng) for _ in range(4)]
+
+    def build(backend):
+        t = LSMTree(LSMConfig(codec="opd", value_width=W,
+                              file_bytes=8 * 1024, l0_limit=2, size_ratio=3,
+                              filter_backend=backend))
+        for k, v in zip(keys.tolist(), vals):
+            t.put(int(k), v)
+        return t
+
+    trees = {b: build(b) for b in ("numpy", "jax", "jax_packed", "fused")}
+    results = {b: t.filter_many(preds) for b, t in trees.items()}
+    base = results["numpy"]
+    for b in ("jax", "jax_packed", "fused"):
+        for p, ra, rb in zip(preds, base, results[b]):
+            assert np.array_equal(ra.keys, rb.keys), (b, p)
+            assert np.array_equal(ra.values, rb.values), (b, p)
+            assert ra.n_matched_raw == rb.n_matched_raw, (b, p)
