@@ -104,6 +104,40 @@ def filter_cpu(p: CostParams) -> Dict[str, float]:
     return {"plain": plain, "heavy": heavy, "opd": opd}
 
 
+def aggregate_cpu(p: CostParams) -> Dict[str, float]:
+    """Analytics-scan CPU (§4.2.2 structure applied to aggregation):
+    codes-scanned vs values-decoded work for one full-column aggregate
+    (count / min / max / group-by histogram).
+
+    plain  touches every value byte once (N * S_V * C_S) — aggregation
+           is a comparison-per-byte scan over decoded values.
+    heavy  decompresses every file first (m * F * C_D), then plain.
+    opd    scans packed CODES (N * S_O / S_I with SIMD) and folds per
+           dictionary, not per row: each file contributes D_i * S_V
+           dictionary-table work (weight/label gather) and the fold
+           itself — no per-row value decode ever happens.
+    """
+    plain = p.N * p.S_V * p.C_S  # aggregation emits scalars, no row copy
+    heavy = p.m_heavy * p.F * p.C_D + plain
+    dict_term = p.m_opd * p.D_i * p.S_V * p.C_S
+    opd = p.N * p.S_O * p.C_S / p.S_I + dict_term
+    return {"plain": plain, "heavy": heavy, "opd": opd}
+
+
+def aggregate_io(p: CostParams, zone_skip: float = 0.0) -> Dict[str, float]:
+    """Bytes a full-column aggregate must read.  plain/heavy read every
+    stored value byte; OPD reads the packed code column plus each file's
+    dictionary, and the zone-map tile short-circuit skips a further
+    ``zone_skip`` fraction of the code bytes (tiles answered in closed
+    form from their zone are never fetched)."""
+    assert 0.0 <= zone_skip <= 1.0
+    plain = float(p.N * p.S_V)
+    heavy = plain * 0.5  # the model's heavy codec halves stored bytes
+    codes = p.N * p.S_O * (1.0 - zone_skip)
+    dicts = p.m_opd * p.D_i * p.S_V
+    return {"plain": plain, "heavy": heavy, "opd": float(codes + dicts)}
+
+
 def inequality_I1_border(p: CostParams) -> float:
     """Largest D_i * log2(D_i) for which OPD compaction beats plain."""
     return (p.F / p.S_V) * (p.S_V - p.S_O) / (p.S_K + p.S_O)

@@ -189,6 +189,7 @@ class LSMTree:
         self.flush_stats = StageStats()
         self.lookup_stats = StageStats()
         self.throttle_stats = StageStats()  # 'slowdown' / 'stop' stages
+        self.agg_stats = StageStats()       # analytics pushdown (repro.query)
         self.n_flushes = 0
         self.n_compactions = 0
         self.write_stalls = 0
@@ -861,6 +862,55 @@ class LSMTree:
             snapshot_seqno=snap.seqno, backend=self.cfg.filter_backend,
             value_width=self.cfg.value_width,
         )
+
+    # ------------------------------------------------------------------ #
+    # analytics pushdown (aggregates on packed codes; repro.query)
+    # ------------------------------------------------------------------ #
+    def aggregate(self, spec, snapshot: Optional[Snapshot] = None):
+        """One aggregate against a consistent snapshot -> ``AggResult``."""
+        return self.aggregate_many([spec], snapshot)[0]
+
+    def aggregate_many(self, specs, snapshot: Optional[Snapshot] = None):
+        """Batched aggregates: all specs share one pass over every run
+        (scalar specs one zone-gated ``fused_level_agg`` launch per level
+        on kernel backends), against a single consistent snapshot."""
+        from repro.query import finalize_partial
+
+        snap = snapshot or self.snapshot()
+        specs = self._resolve_agg_specs(specs, snap)
+        parts = self._aggregate_partials(specs, snap)
+        return [finalize_partial(spec, part)
+                for spec, part in zip(specs, parts)]
+
+    def aggregate_partials(self, specs, snapshot: Optional[Snapshot] = None):
+        """Mergeable per-tree partials (the scatter half of the sharded
+        scatter-gather).  Specs must arrive RESOLVED (bucket edges fixed
+        globally) or per-shard partials would not share labels."""
+        snap = snapshot or self.snapshot()
+        return self._aggregate_partials(specs, snap)
+
+    def _aggregate_partials(self, specs, snap: Snapshot):
+        from repro.query import evaluate_aggregates
+
+        return evaluate_aggregates(
+            snap.runs, snap.mems, specs,
+            stats=self.agg_stats, store=self.store, blob_mgr=self.blob_mgr,
+            snapshot_seqno=snap.seqno, backend=self.cfg.filter_backend,
+            value_width=self.cfg.value_width,
+        )
+
+    def _resolve_agg_specs(self, specs, snap: Snapshot):
+        from repro.query import resolve_specs
+        from repro.query.planner import collect_domain
+
+        specs = list(specs)
+        if all(spec.group is None or spec.group.resolved()
+               for spec in specs):
+            return specs
+        with self.agg_stats.time("plan"):
+            domain = collect_domain(snap.runs, snap.mems, self.blob_mgr,
+                                    self.cfg.value_width)
+        return resolve_specs(specs, domain)
 
     # ------------------------------------------------------------------ #
     # reporting

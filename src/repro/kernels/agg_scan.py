@@ -1,0 +1,350 @@
+"""Pallas TPU kernels: zone-gated aggregation directly on packed codes.
+
+Two kernels extend ``fused_scan.py``'s tile loop from predicate bitmaps
+to *partial aggregates* (ROADMAP item 1 — the analytics tier):
+
+``fused_zone_agg_2d``
+  One launch evaluates K (range, aggregate) pairs over the concatenated
+  tile-aligned packed columns of a level.  Per tile and per range k it
+  emits ``(count, min_code, max_code, sum)`` — matches are never
+  materialized; min/max stay in the packed-code domain (the OPD is
+  order-preserving, so code order IS value order within a dictionary)
+  and SUM gathers an int32 weight per matching code from a per-SCT
+  weight table (``numeric(dict[code])``, the "decode" that never touches
+  strings).
+
+``zone_histogram_2d``
+  Per-code-bucket histogram for GROUP BY: bin edges are per-SCT code
+  values (SMEM table), and each bin count is a difference of two rank
+  counts ``#(v >= e_b) - #(v >= e_{b+1})`` — no scatter needed.
+
+Zone short-circuiting (the closed-form contribution the paper's zone
+maps enable): a tile whose code zone ``[z_lo, z_hi]`` is CONTAINED by a
+range contributes ``n_valid`` (its real-entry count) without reading a
+single word; for the histogram, a zone crossed by no bin edge drops its
+whole tile into one bin.  ``z_lo >= 1`` is required so tombstones
+(packed as code 0) cannot hide inside a short-circuited tile.
+
+Exactness of the min/max fold (why superset tile zones are safe): tile
+zones aggregate the 4 KB-block zones the tile overlaps, so ``z_lo`` may
+undercut the tile's true minimum — but ``z_lo`` is always *attained* by
+some entry of an overlapping block of the SAME run, and containment
+(``lo <= z_lo <= z_hi <= hi``) makes that entry a match.  Folding
+``min`` over per-tile contributions of one run therefore returns a
+value that (a) is attained by a matching entry of the run and (b) lower-
+bounds every matching entry (the true-min entry's tile contributes at
+most its value).  The fold is exact per run; cross-run combination must
+happen in value space after one dictionary decode per run.
+
+Layout notes shared with ``fused_scan``: little-endian fields in uint32
+words (word j holds codes ``j*per .. j*per+per-1``, ``per = 32//width``),
+padding words are 0xFFFFFFFF, a padding tile carries the empty zone
+``(0xFFFFFFFF, 0)``.  Padding fields can alias real codes (field value
+``2**width - 1``), so evaluated tiles mask entries by their linear index
+against the tile's ``n_valid`` meta column.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:  # SMEM placement for meta/range/edge tables (TPU); interpret supports it
+    from jax.experimental.pallas import tpu as pltpu
+
+    _SMEM = {"memory_space": pltpu.SMEM}
+except Exception:  # pragma: no cover - pallas builds without the TPU ext
+    _SMEM = {}
+
+DEFAULT_BLOCK_ROWS = 8
+LANES = 128
+AGG_META_COLS = 6   # (zone_lo, zone_hi, range_base, n_valid, weight_base, 0)
+EMPTY_ZONE = (0xFFFFFFFF, 0)
+MIN_SENTINEL = 0xFFFFFFFF   # per-tile min when no entry matched
+MAX_BINS = 64       # histogram kernel cap (static unroll is O(bins * per))
+
+# tile flag values (per-tile provenance for StageStats)
+FLAG_SKIPPED = 0        # zone intersects no range: words never read
+FLAG_EVALUATED = 1      # fields extracted and compared
+FLAG_SHORTCIRCUIT = 2   # closed-form contribution from the zone alone
+
+
+def _entry_index(rows: int):
+    """Linear entry-number-per-word grid [rows, 128] (times ``per`` plus
+    the field number gives the entry index; 2D iota keeps TPU happy)."""
+    r = jax.lax.broadcasted_iota(jnp.int32, (rows, LANES), 0)
+    l = jax.lax.broadcasted_iota(jnp.int32, (rows, LANES), 1)
+    return r * LANES + l
+
+
+def _make_agg_kernel(width: int, n_preds: int, with_sum: bool,
+                     block_rows: int):
+    per = 32 // width
+    tile_entries = block_rows * LANES * per
+
+    def kernel(meta_ref, ranges_ref, w_ref, wt_ref,
+               cnt_ref, min_ref, max_ref, sum_ref, flag_ref):
+        z_lo = meta_ref[0, 0]
+        z_hi = meta_ref[0, 1]
+        base = meta_ref[0, 2]
+        n_valid = meta_ref[0, 3].astype(jnp.int32)
+        w_base = meta_ref[0, 4].astype(jnp.int32)
+
+        any_hit = jnp.zeros((), jnp.bool_)
+        # closed form needs z_lo >= 1 (tombstones pack as 0 and would be
+        # counted) and every intersecting range to CONTAIN the zone.
+        all_closed = z_lo >= jnp.uint32(1)
+        for k in range(n_preds):  # static unroll; ranges live in SMEM
+            lo = ranges_ref[base + k, 0]
+            hi = ranges_ref[base + k, 1]
+            inter = jnp.logical_and(lo <= hi,
+                                    jnp.logical_and(lo <= z_hi, hi >= z_lo))
+            contained = jnp.logical_and(inter,
+                                        jnp.logical_and(lo <= z_lo,
+                                                        z_hi <= hi))
+            any_hit = jnp.logical_or(any_hit, inter)
+            all_closed = jnp.logical_and(
+                all_closed, jnp.logical_or(jnp.logical_not(inter), contained))
+        if with_sum:
+            # SUM has no closed form from (count, zone) alone — it would
+            # need per-block weight sums in the zone map (future work).
+            all_closed = jnp.zeros((), jnp.bool_)
+        shortcut = jnp.logical_and(any_hit, all_closed)
+
+        @pl.when(shortcut)
+        def _closed_form():
+            # every real entry of the tile matches each intersecting
+            # range; z_lo / z_hi are attained within this run (see
+            # module docstring), so they are valid min/max partials.
+            for k in range(n_preds):
+                lo = ranges_ref[base + k, 0]
+                hi = ranges_ref[base + k, 1]
+                inter = jnp.logical_and(
+                    lo <= hi, jnp.logical_and(lo <= z_hi, hi >= z_lo))
+                cnt_ref[0, k] = jnp.where(inter, n_valid, 0)
+                min_ref[0, k] = jnp.where(inter, z_lo,
+                                          jnp.uint32(MIN_SENTINEL))
+                max_ref[0, k] = jnp.where(inter, z_hi, jnp.uint32(0))
+                sum_ref[0, k] = jnp.int32(0)
+
+        @pl.when(jnp.logical_and(any_hit, jnp.logical_not(shortcut)))
+        def _evaluate():
+            fmask = jnp.uint32((1 << width) - 1)
+            w = w_ref[...]                                # [rows, 128]
+            widx = _entry_index(w.shape[0])               # word number
+            if with_sum:
+                wtab = wt_ref[...].reshape(-1)            # flat int32 weights
+            cnts = [jnp.zeros((), jnp.int32) for _ in range(n_preds)]
+            mins = [jnp.uint32(MIN_SENTINEL) for _ in range(n_preds)]
+            maxs = [jnp.uint32(0) for _ in range(n_preds)]
+            sums = [jnp.zeros((), jnp.int32) for _ in range(n_preds)]
+            for f in range(per):  # static unroll: per in {1,2,4,8,16,32}
+                v = (w >> jnp.uint32(f * width)) & fmask  # extracted ONCE
+                valid = (widx * per + f) < n_valid        # padding guard
+                for k in range(n_preds):                  # reused K times
+                    lo = ranges_ref[base + k, 0]
+                    hi = ranges_ref[base + k, 1]
+                    p = jnp.logical_and(valid,
+                                        jnp.logical_and(v >= lo, v <= hi))
+                    cnts[k] = cnts[k] + jnp.sum(p.astype(jnp.int32))
+                    mins[k] = jnp.minimum(mins[k], jnp.min(
+                        jnp.where(p, v, jnp.uint32(MIN_SENTINEL))))
+                    maxs[k] = jnp.maximum(maxs[k], jnp.max(
+                        jnp.where(p, v, jnp.uint32(0))))
+                    if with_sum:
+                        # dictionary gather: weight of code v (planned
+                        # ranges never exceed the dictionary, so the
+                        # index stays inside this SCT's table slice)
+                        idx = jnp.where(p, w_base + v.astype(jnp.int32), 0)
+                        wt = jnp.take(wtab, idx, axis=0)
+                        sums[k] = sums[k] + jnp.sum(
+                            jnp.where(p, wt, jnp.int32(0)))
+            for k in range(n_preds):
+                cnt_ref[0, k] = cnts[k]
+                min_ref[0, k] = mins[k]
+                max_ref[0, k] = maxs[k]
+                sum_ref[0, k] = sums[k]
+
+        @pl.when(jnp.logical_not(any_hit))
+        def _skip():
+            for k in range(n_preds):
+                cnt_ref[0, k] = jnp.int32(0)
+                min_ref[0, k] = jnp.uint32(MIN_SENTINEL)
+                max_ref[0, k] = jnp.uint32(0)
+                sum_ref[0, k] = jnp.int32(0)
+
+        flag_ref[0, 0] = jnp.where(
+            shortcut, jnp.int32(FLAG_SHORTCIRCUIT),
+            any_hit.astype(jnp.int32))
+
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnames=("width", "n_preds", "with_sum",
+                                             "block_rows", "interpret"))
+def fused_zone_agg_2d(
+    words: jax.Array,     # uint32 [rows, 128], rows == n_tiles*block_rows
+    meta: jax.Array,      # uint32 [n_tiles, 6]
+    ranges: jax.Array,    # uint32 [R, 2] inclusive [lo, hi]; lo > hi empty
+    weights: jax.Array,   # int32 [t_rows, 128] flat per-SCT weight tables
+    width: int = 8,
+    n_preds: int = 1,
+    with_sum: bool = False,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    interpret: bool = True,
+):
+    """Per-tile partial aggregates for K code ranges in one launch.
+
+    Returns ``(counts i32 [n_tiles, K], mins u32, maxs u32, sums i32,
+    flags i32 [n_tiles, 1])``.  ``mins == MIN_SENTINEL`` / ``counts == 0``
+    mark tiles with no match for that range; ``flags`` records skip /
+    evaluate / short-circuit per tile for pruning telemetry.
+    """
+    rows = words.shape[0]
+    n_tiles = meta.shape[0]
+    assert words.shape[1] == LANES and rows == n_tiles * block_rows, \
+        (words.shape, meta.shape, block_rows)
+    assert meta.shape[1] == AGG_META_COLS and ranges.shape[1] == 2
+    assert weights.shape[1] == LANES
+    t_rows = weights.shape[0]
+    grid = (n_tiles,)
+    meta = jnp.asarray(meta, jnp.uint32)
+    ranges = jnp.asarray(ranges, jnp.uint32)
+    weights = jnp.asarray(weights, jnp.int32)
+    return pl.pallas_call(
+        _make_agg_kernel(width, n_preds, with_sum, block_rows),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, AGG_META_COLS), lambda i: (i, 0), **_SMEM),
+            pl.BlockSpec(ranges.shape, lambda i: (0, 0), **_SMEM),
+            pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((t_rows, LANES), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, n_preds), lambda i: (i, 0)),
+            pl.BlockSpec((1, n_preds), lambda i: (i, 0)),
+            pl.BlockSpec((1, n_preds), lambda i: (i, 0)),
+            pl.BlockSpec((1, n_preds), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_tiles, n_preds), jnp.int32),
+            jax.ShapeDtypeStruct((n_tiles, n_preds), jnp.uint32),
+            jax.ShapeDtypeStruct((n_tiles, n_preds), jnp.uint32),
+            jax.ShapeDtypeStruct((n_tiles, n_preds), jnp.int32),
+            jax.ShapeDtypeStruct((n_tiles, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(meta, ranges, words, weights)
+
+
+def _make_hist_kernel(width: int, n_bins: int, block_rows: int):
+    per = 32 // width
+    n_edges = n_bins + 1
+
+    def kernel(meta_ref, edges_ref, w_ref, hist_ref, flag_ref):
+        z_lo = meta_ref[0, 0]
+        z_hi = meta_ref[0, 1]
+        seg = meta_ref[0, 2]
+        n_valid = meta_ref[0, 3].astype(jnp.int32)
+
+        # how many edges sit at or below each zone bound (static unroll,
+        # edges in SMEM).  Equal counts mean no edge crosses the zone:
+        # every real entry falls in the SAME bin.
+        n_le_lo = jnp.zeros((), jnp.int32)
+        n_le_hi = jnp.zeros((), jnp.int32)
+        for e in range(n_edges):
+            edge = edges_ref[seg, e]
+            n_le_lo = n_le_lo + (edge <= z_lo).astype(jnp.int32)
+            n_le_hi = n_le_hi + (edge <= z_hi).astype(jnp.int32)
+        same_bin = n_le_lo == n_le_hi
+        # zone entirely outside [e_0, e_B): nothing to count
+        outside = jnp.logical_or(z_hi < edges_ref[seg, 0],
+                                 z_lo >= edges_ref[seg, n_bins])
+        empty = jnp.logical_or(outside, n_valid == 0)
+        closed = jnp.logical_or(
+            empty,
+            jnp.logical_and(same_bin, z_lo >= jnp.uint32(1)))
+
+        @pl.when(closed)
+        def _closed_form():
+            # all n_valid entries land in the bin holding z_lo (edge
+            # counts locate it without reading a word); tombstone-free is
+            # guaranteed by z_lo >= 1
+            bstar = n_le_lo - 1
+            for b in range(n_bins):
+                take = jnp.logical_and(jnp.logical_not(empty), bstar == b)
+                hist_ref[0, b] = jnp.where(take, n_valid, 0)
+            flag_ref[0, 0] = jnp.where(empty, jnp.int32(FLAG_SKIPPED),
+                                       jnp.int32(FLAG_SHORTCIRCUIT))
+
+        @pl.when(jnp.logical_not(closed))
+        def _evaluate():
+            w = w_ref[...]
+            widx = _entry_index(w.shape[0])
+            # rank counting: cnt_ge[e] = #(valid entries >= edges[e]);
+            # hist[b] = cnt_ge[b] - cnt_ge[b+1] (no scatter required)
+            ge = [jnp.zeros((), jnp.int32) for _ in range(n_edges)]
+            fmask = jnp.uint32((1 << width) - 1)
+            for f in range(per):  # static unroll
+                v = (w >> jnp.uint32(f * width)) & fmask
+                valid = (widx * per + f) < n_valid
+                for e in range(n_edges):
+                    p = jnp.logical_and(valid, v >= edges_ref[seg, e])
+                    ge[e] = ge[e] + jnp.sum(p.astype(jnp.int32))
+            for b in range(n_bins):
+                hist_ref[0, b] = ge[b] - ge[b + 1]
+            flag_ref[0, 0] = jnp.int32(FLAG_EVALUATED)
+
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnames=("width", "n_bins",
+                                             "block_rows", "interpret"))
+def zone_histogram_2d(
+    words: jax.Array,   # uint32 [rows, 128], rows == n_tiles*block_rows
+    meta: jax.Array,    # uint32 [n_tiles, 6]: (z_lo, z_hi, seg, n_valid, 0, 0)
+    edges: jax.Array,   # uint32 [S, n_bins+1] per-SCT bin edges, ascending
+    width: int = 8,
+    n_bins: int = 8,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    interpret: bool = True,
+):
+    """Per-tile code histogram: bin b counts codes in [e_b, e_{b+1}).
+
+    Returns ``(hist i32 [n_tiles, n_bins], flags i32 [n_tiles, 1])``.
+    Each tile reads its own SCT's edge row (``seg`` meta column) so SCTs
+    with different dictionaries share the launch; trailing duplicated
+    edges make short rows safe (their bins are empty by construction).
+    """
+    rows = words.shape[0]
+    n_tiles = meta.shape[0]
+    assert words.shape[1] == LANES and rows == n_tiles * block_rows, \
+        (words.shape, meta.shape, block_rows)
+    assert meta.shape[1] == AGG_META_COLS
+    assert edges.shape[1] == n_bins + 1 and n_bins <= MAX_BINS, edges.shape
+    n_segs = edges.shape[0]
+    grid = (n_tiles,)
+    meta = jnp.asarray(meta, jnp.uint32)
+    edges = jnp.asarray(edges, jnp.uint32)
+    return pl.pallas_call(
+        _make_hist_kernel(width, n_bins, block_rows),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, AGG_META_COLS), lambda i: (i, 0), **_SMEM),
+            pl.BlockSpec((n_segs, n_bins + 1), lambda i: (0, 0), **_SMEM),
+            pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, n_bins), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_tiles, n_bins), jnp.int32),
+            jax.ShapeDtypeStruct((n_tiles, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(meta, edges, words)

@@ -15,6 +15,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels import agg_scan as _agg
 from repro.kernels import bitpack as _bitpack
 from repro.kernels import bloom_probe as _bloom
 from repro.kernels import fused_scan as _fused
@@ -209,6 +210,169 @@ def bitmap_to_mask(bitmap: np.ndarray, width: int, n: int) -> np.ndarray:
     bits = np.arange(per, dtype=np.uint32)
     m = ((bitmap[:, None] >> bits[None, :]) & 1).astype(bool)
     return m.reshape(-1)[:n]
+
+
+# --------------------------------------------------------------------------- #
+# agg_scan: zone-gated aggregation directly on packed codes
+# --------------------------------------------------------------------------- #
+def _level_tiles(packed_list, n_list, zones_list, width: int,
+                 block_rows: int, meta_cols: int):
+    """Shared tile/meta builder for the level-wide agg launches: pads each
+    SCT's packed words to tile boundaries with 0xFFFFFFFF, concatenates,
+    and fills the per-tile meta rows (zone aggregated from the 4 KB block
+    zones the tile covers, n_valid = real entries inside the tile)."""
+    per = 32 // width
+    tile_words = block_rows * LANES
+    tile_entries = tile_words * per
+    chunks, metas, seg_words, seg_tiles = [], [], [], []
+    for s_idx, (packed, n, zones) in enumerate(
+            zip(packed_list, n_list, zones_list)):
+        words = np.asarray(packed, np.uint32).reshape(-1)
+        m = words.shape[0]
+        n_tiles = max(1, -(-m // tile_words))
+        pad = np.full(n_tiles * tile_words, 0xFFFFFFFF, np.uint32)
+        pad[:m] = words
+        chunks.append(pad)
+        seg_words.append(m)
+        seg_tiles.append(n_tiles)
+        meta = np.zeros((n_tiles, meta_cols), np.uint32)
+        for t in range(n_tiles):
+            e0 = t * tile_entries
+            e1 = min(int(n), (t + 1) * tile_entries)
+            meta[t, 3] = max(0, e1 - e0)
+            if e0 >= e1:  # padding-only tile: always skipped
+                meta[t, 0], meta[t, 1] = _agg.EMPTY_ZONE
+            elif zones is None:
+                # no zone map: forced evaluation (z_lo = 0 also blocks
+                # the closed-form path, so tombstones stay safe)
+                meta[t, 0], meta[t, 1] = 0, 0xFFFFFFFF
+            else:
+                code_lo, code_hi, epb = zones
+                b0, b1 = e0 // epb, (e1 - 1) // epb
+                meta[t, 0] = code_lo[b0:b1 + 1].min()
+                meta[t, 1] = code_hi[b0:b1 + 1].max()
+        metas.append(meta)
+    words_all = np.concatenate(chunks).reshape(-1, LANES)
+    return words_all, metas, seg_words, seg_tiles
+
+
+def _tile_info(flags: np.ndarray) -> dict:
+    return {
+        "tiles_total": int(flags.shape[0]),
+        "tiles_skipped": int((flags == _agg.FLAG_SKIPPED).sum()),
+        "tiles_evaluated": int((flags == _agg.FLAG_EVALUATED).sum()),
+        "tiles_shortcircuit": int((flags == _agg.FLAG_SHORTCIRCUIT).sum()),
+    }
+
+
+def fused_level_agg(
+    packed_list, n_list, ranges_list, zones_list, width: int,
+    weights_list=None, block_rows: int = _fused.DEFAULT_BLOCK_ROWS,
+):
+    """ONE launch computing K (count, min, max[, sum]) partials over every
+    packed column of a level, folded per SCT on the host.
+
+      packed_list:  per-SCT uint32 packed words (s.packed)
+      n_list:       per-SCT entry counts
+      ranges_list:  per-SCT uint32 [K, 2] inclusive [lo, hi]; lo > hi empty
+      zones_list:   per-SCT (code_lo, code_hi, entries_per_block) or None
+      weights_list: per-SCT int32 numeric weight per code (enables SUM;
+                    ranges must then lie inside each dictionary)
+
+    Returns (per_sct, info): per_sct[s] is a dict with int64 arrays
+    ``counts``/``sums`` [K] and ``min_code``/``max_code`` [K] (-1 when no
+    entry of that SCT matched range k); the min/max fold over tiles is
+    exact per SCT (see ``agg_scan`` docstring).  info carries the
+    tiles_{total,skipped,evaluated,shortcircuit} telemetry.
+    """
+    n_preds = int(np.asarray(ranges_list[0], np.uint32).reshape(-1, 2).shape[0])
+    with_sum = weights_list is not None
+    words_all, metas, _seg_words, seg_tiles = _level_tiles(
+        packed_list, n_list, zones_list, width, block_rows,
+        _agg.AGG_META_COLS)
+    if with_sum:
+        w_off, tabs = 0, []
+        for s_idx, (meta, wts) in enumerate(zip(metas, weights_list)):
+            meta[:, 4] = w_off
+            wts = np.asarray(wts, np.int32).reshape(-1)
+            tabs.append(wts)
+            w_off += wts.shape[0]
+        flat = np.concatenate(tabs) if tabs else np.zeros(0, np.int32)
+        pad = -(-max(1, flat.shape[0]) // LANES) * LANES
+        weights = np.zeros(pad, np.int32)
+        weights[:flat.shape[0]] = flat
+        weights = weights.reshape(-1, LANES)
+    else:
+        weights = np.zeros((1, LANES), np.int32)
+    meta_all = np.concatenate(metas)
+    meta_all[:, 2] = np.repeat(np.arange(len(seg_tiles)), seg_tiles) * n_preds
+    ranges_all = np.concatenate(
+        [np.asarray(r, np.uint32).reshape(-1, 2) for r in ranges_list])
+    cnts, mins, maxs, sums, flags = _agg.fused_zone_agg_2d(
+        jnp.asarray(words_all), jnp.asarray(meta_all), jnp.asarray(ranges_all),
+        jnp.asarray(weights), width=width, n_preds=n_preds, with_sum=with_sum,
+        block_rows=block_rows, interpret=INTERPRET)
+    cnts = np.asarray(cnts).astype(np.int64)
+    mins = np.asarray(mins).astype(np.int64)
+    maxs = np.asarray(maxs).astype(np.int64)
+    sums = np.asarray(sums).astype(np.int64)
+    flags = np.asarray(flags).reshape(-1)
+
+    per_sct, t_off = [], 0
+    for n_tiles in seg_tiles:
+        c = cnts[t_off:t_off + n_tiles]
+        got = c > 0
+        lo = np.where(got, mins[t_off:t_off + n_tiles], np.int64(2**32))
+        hi = np.where(got, maxs[t_off:t_off + n_tiles], np.int64(-1))
+        per_sct.append({
+            "counts": c.sum(axis=0),
+            "min_code": np.where(got.any(axis=0), lo.min(axis=0), -1),
+            "max_code": np.where(got.any(axis=0), hi.max(axis=0), -1),
+            "sums": sums[t_off:t_off + n_tiles].sum(axis=0),
+        })
+        t_off += n_tiles
+    return per_sct, _tile_info(flags)
+
+
+def level_histogram(
+    packed_list, n_list, edges_list, zones_list, width: int,
+    block_rows: int = _fused.DEFAULT_BLOCK_ROWS,
+):
+    """ONE launch computing a per-code-bucket histogram over every packed
+    column of a level (the GROUP BY gather).
+
+    ``edges_list[s]`` is an ascending uint32 array of B_s + 1 code-space
+    bin edges for SCT s (bin b = [e_b, e_{b+1})).  Rows are padded to the
+    level's widest edge table by duplicating the last edge (empty bins),
+    so SCTs with different group counts share the launch.
+
+    Returns (hists, info): hists[s] is int64 [B_s]; info carries the tile
+    telemetry (a short-circuited tile contributed its whole entry count
+    to one bin without reading data).
+    """
+    n_bins = max(len(e) - 1 for e in edges_list)
+    assert n_bins <= _agg.MAX_BINS, n_bins
+    words_all, metas, _seg_words, seg_tiles = _level_tiles(
+        packed_list, n_list, zones_list, width, block_rows,
+        _agg.AGG_META_COLS)
+    edges = np.zeros((len(edges_list), n_bins + 1), np.uint32)
+    for s_idx, e in enumerate(edges_list):
+        e = np.asarray(e, np.uint32).reshape(-1)
+        edges[s_idx, :e.shape[0]] = e
+        edges[s_idx, e.shape[0]:] = e[-1]
+    meta_all = np.concatenate(metas)
+    meta_all[:, 2] = np.repeat(np.arange(len(seg_tiles)), seg_tiles)
+    hist2, flags = _agg.zone_histogram_2d(
+        jnp.asarray(words_all), jnp.asarray(meta_all), jnp.asarray(edges),
+        width=width, n_bins=n_bins, block_rows=block_rows,
+        interpret=INTERPRET)
+    hist2 = np.asarray(hist2).astype(np.int64)
+    flags = np.asarray(flags).reshape(-1)
+    hists, t_off = [], 0
+    for n_tiles, e in zip(seg_tiles, edges_list):
+        hists.append(hist2[t_off:t_off + n_tiles].sum(axis=0)[:len(e) - 1])
+        t_off += n_tiles
+    return hists, _tile_info(flags)
 
 
 # --------------------------------------------------------------------------- #

@@ -155,6 +155,114 @@ def fused_zone_filter(words: jax.Array, meta: jax.Array, ranges: jax.Array,
 
 
 # --------------------------------------------------------------------------- #
+# agg_scan: zone-gated aggregation + histogram oracles
+# --------------------------------------------------------------------------- #
+def fused_zone_agg(words, meta, ranges, weights, width: int, n_preds: int,
+                   with_sum: bool, block_rows: int):
+    """Oracle for ``agg_scan.fused_zone_agg_2d`` — mirrors the kernel's
+    tile contract exactly, INCLUDING the short-circuit semantics (a
+    short-circuited tile reports (n_valid, z_lo, z_hi) rather than the
+    in-tile min/max, so partials only agree after the per-run fold; the
+    differential tests compare both the raw tiles and the fold)."""
+    import numpy as np
+
+    words = np.asarray(words, np.uint32)
+    meta = np.asarray(meta, np.uint64)  # uint64: no overflow in compares
+    ranges = np.asarray(ranges, np.uint64)
+    weights = np.asarray(weights, np.int64).reshape(-1)
+    per = 32 // width
+    n_tiles = meta.shape[0]
+    sentinel = np.uint32(0xFFFFFFFF)
+    cnts = np.zeros((n_tiles, n_preds), np.int32)
+    mins = np.full((n_tiles, n_preds), sentinel, np.uint32)
+    maxs = np.zeros((n_tiles, n_preds), np.uint32)
+    sums = np.zeros((n_tiles, n_preds), np.int32)
+    flags = np.zeros((n_tiles, 1), np.int32)
+    for i in range(n_tiles):  # python loop: oracle clarity over speed
+        z_lo, z_hi = meta[i, 0], meta[i, 1]
+        base, n_valid, w_base = int(meta[i, 2]), int(meta[i, 3]), int(meta[i, 4])
+        inter = np.zeros(n_preds, bool)
+        contained = np.zeros(n_preds, bool)
+        for k in range(n_preds):
+            lo, hi = ranges[base + k, 0], ranges[base + k, 1]
+            inter[k] = lo <= hi and lo <= z_hi and hi >= z_lo
+            contained[k] = inter[k] and lo <= z_lo and z_hi <= hi
+        any_hit = inter.any()
+        shortcut = (any_hit and not with_sum and z_lo >= 1
+                    and all(contained[k] or not inter[k]
+                            for k in range(n_preds)))
+        if shortcut:
+            for k in range(n_preds):
+                if inter[k]:
+                    cnts[i, k] = n_valid
+                    mins[i, k] = np.uint32(z_lo)
+                    maxs[i, k] = np.uint32(z_hi)
+            flags[i, 0] = 2
+            continue
+        if not any_hit:
+            continue
+        flags[i, 0] = 1
+        tile = words[i * block_rows:(i + 1) * block_rows].reshape(-1)
+        # word j holds codes j*per .. j*per+per-1 (little-endian fields)
+        fields = np.zeros(tile.shape[0] * per, np.uint64)
+        for f in range(per):
+            fields[f::per] = (tile.astype(np.uint64) >> np.uint64(f * width)) \
+                & np.uint64((1 << width) - 1)
+        valid = np.arange(fields.shape[0]) < n_valid
+        for k in range(n_preds):
+            lo, hi = ranges[base + k, 0], ranges[base + k, 1]
+            p = valid & (fields >= lo) & (fields <= hi)
+            cnts[i, k] = int(p.sum())
+            if p.any():
+                mins[i, k] = np.uint32(fields[p].min())
+                maxs[i, k] = np.uint32(fields[p].max())
+                if with_sum:
+                    sums[i, k] = np.int64(
+                        weights[w_base + fields[p].astype(np.int64)]
+                        .sum(dtype=np.int64)).astype(np.int32)
+    return cnts, mins, maxs, sums, flags
+
+
+def zone_histogram(words, meta, edges, width: int, n_bins: int,
+                   block_rows: int):
+    """Oracle for ``agg_scan.zone_histogram_2d``: bin b of tile i counts
+    the tile's valid codes in [edges[seg, b], edges[seg, b+1])."""
+    import numpy as np
+
+    words = np.asarray(words, np.uint32)
+    meta = np.asarray(meta, np.uint64)
+    edges = np.asarray(edges, np.uint64)
+    per = 32 // width
+    n_tiles = meta.shape[0]
+    hist = np.zeros((n_tiles, n_bins), np.int32)
+    flags = np.zeros((n_tiles, 1), np.int32)
+    for i in range(n_tiles):
+        z_lo, z_hi = meta[i, 0], meta[i, 1]
+        seg, n_valid = int(meta[i, 2]), int(meta[i, 3])
+        e = edges[seg]
+        n_le_lo = int((e <= z_lo).sum())
+        n_le_hi = int((e <= z_hi).sum())
+        outside = z_hi < e[0] or z_lo >= e[n_bins]
+        empty = outside or n_valid == 0
+        if empty:
+            continue
+        if n_le_lo == n_le_hi and z_lo >= 1:
+            hist[i, n_le_lo - 1] = n_valid
+            flags[i, 0] = 2
+            continue
+        flags[i, 0] = 1
+        tile = words[i * block_rows:(i + 1) * block_rows].reshape(-1)
+        fields = np.zeros(tile.shape[0] * per, np.uint64)
+        for f in range(per):
+            fields[f::per] = (tile.astype(np.uint64) >> np.uint64(f * width)) \
+                & np.uint64((1 << width) - 1)
+        fields = fields[np.arange(fields.shape[0]) < n_valid]
+        for b in range(n_bins):
+            hist[i, b] = int(((fields >= e[b]) & (fields < e[b + 1])).sum())
+    return hist, flags
+
+
+# --------------------------------------------------------------------------- #
 # bloom_probe: batched block-bloom membership probe
 # --------------------------------------------------------------------------- #
 BLOOM_SEEDS32 = (0x9E3779B9, 0x85EBCA6B, 0xC2B2AE35, 0x27D4EB2F, 0x165667B1, 0x9E377969)

@@ -1,0 +1,21 @@
+"""Analytics pushdown on compressed data (paper thesis, aggregation tier).
+
+``AggSpec`` describes one aggregate (COUNT / SUM / MIN / MAX / GROUP BY
+count with optional top-k) with an optional filter predicate;
+``evaluate_aggregates`` executes a batch of specs against a snapshot's
+runs + memtable stack, computing directly on packed OPD codes whenever
+the snapshot allows it; ``AggPartial`` is the mergeable partial-
+aggregate contract the sharded scatter-gather relies on.
+"""
+
+from repro.query.spec import (AggPartial, AggResult, AggSpec, GroupBy,
+                              finalize_partial, merge_partials,
+                              numeric_values)
+from repro.query.planner import resolve_specs
+from repro.query.executor import evaluate_aggregates
+
+__all__ = [
+    "AggSpec", "GroupBy", "AggPartial", "AggResult",
+    "finalize_partial", "merge_partials", "numeric_values",
+    "resolve_specs", "evaluate_aggregates",
+]

@@ -1,0 +1,209 @@
+"""Aggregate specs, partials, and the merge contract.
+
+An ``AggSpec`` is one aggregate over the value column:
+
+  op          'count' | 'sum' | 'min' | 'max' | 'group_count'
+  pred        optional filter Predicate (None = whole column); a range
+              predicate + op='count' is the paper's range-count
+  group       GroupBy for op='group_count'
+  top_k       keep only the k most populous groups (applied AFTER the
+              cross-shard merge — partials always carry every group)
+
+SUM interprets a value as its first contiguous ASCII-digit run parsed
+as an integer and clipped to int32 max (``numeric_values``) — on OPD
+runs that weight is computed once per dictionary CODE and gathered,
+never per row.
+
+``AggPartial`` is the mergeable partial aggregate every source (run,
+memtable delta, shard) reduces to:
+
+  count        matching-row count (int)
+  total        sum of numeric weights (int)
+  min_value /  smallest / largest matching VALUE as bytes (None when
+  max_value    nothing matched) — partials compare in value space, so
+               partials from different dictionaries merge correctly
+  groups       {label bytes -> count}; labels are value prefixes
+               ('prefix' grouping) or bucket lower-bound bytes
+               ('bucket' grouping with globally resolved edges)
+
+``merge`` is associative and commutative with the empty partial as
+identity — the scatter-gather across shards and the per-run fold inside
+one tree use the same operation.  ``finalize_partial`` turns a merged
+partial into the user-facing ``AggResult`` (top-k with the
+deterministic (-count, label) tie-break happens only here).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.opd import Predicate
+
+INT32_MAX = 2**31 - 1
+
+AGG_OPS = ("count", "sum", "min", "max", "group_count")
+
+
+@dataclasses.dataclass(frozen=True)
+class GroupBy:
+    """Grouping key derived from the value itself.
+
+    kind='prefix':  group label = first ``prefix_len`` bytes of the value
+                    (contiguous code ranges in any OPD dictionary — the
+                    dictionary is sorted, so a prefix is an interval).
+    kind='bucket':  ``n_buckets`` range buckets over the value domain;
+                    ``edges`` holds the n_buckets-1 interior boundaries
+                    (bytes, ascending) once the planner resolves them —
+                    resolution must be GLOBAL (one edge set for every
+                    run and shard) or partials would not merge.
+    """
+    kind: str = "prefix"
+    prefix_len: int = 8
+    n_buckets: int = 8
+    edges: Optional[Tuple[bytes, ...]] = None
+
+    def __post_init__(self):
+        assert self.kind in ("prefix", "bucket"), self.kind
+
+    def resolved(self) -> bool:
+        return self.kind == "prefix" or self.edges is not None
+
+    def bucket_label(self, b: int) -> bytes:
+        """Lower-bound label of bucket b (bucket 0 is open below)."""
+        assert self.edges is not None
+        return b"" if b == 0 else self.edges[b - 1]
+
+
+@dataclasses.dataclass(frozen=True)
+class AggSpec:
+    op: str
+    pred: Optional[Predicate] = None
+    group: Optional[GroupBy] = None
+    top_k: Optional[int] = None
+
+    def __post_init__(self):
+        assert self.op in AGG_OPS, self.op
+        if self.op == "group_count":
+            assert self.group is not None, "group_count needs a GroupBy"
+
+    def plan_pred(self) -> Predicate:
+        """The predicate actually planned: None means match-all, which
+        every codec expresses as the empty prefix (code range [0, D))."""
+        return self.pred if self.pred is not None else Predicate("prefix", b"")
+
+
+@dataclasses.dataclass
+class AggPartial:
+    count: int = 0
+    total: int = 0
+    min_value: Optional[bytes] = None
+    max_value: Optional[bytes] = None
+    groups: Optional[Dict[bytes, int]] = None
+
+    def merge(self, other: "AggPartial") -> "AggPartial":
+        out = AggPartial(self.count + other.count, self.total + other.total)
+        vals = [v for v in (self.min_value, other.min_value) if v is not None]
+        out.min_value = min(vals) if vals else None
+        vals = [v for v in (self.max_value, other.max_value) if v is not None]
+        out.max_value = max(vals) if vals else None
+        if self.groups is not None or other.groups is not None:
+            out.groups = dict(self.groups or {})
+            for label, c in (other.groups or {}).items():
+                out.groups[label] = out.groups.get(label, 0) + c
+        return out
+
+    def add_group_counts(self, labels, counts) -> None:
+        if self.groups is None:
+            self.groups = {}
+        for label, c in zip(labels, counts):
+            label = bytes(label)
+            self.groups[label] = self.groups.get(label, 0) + int(c)
+        self.count += int(np.sum(counts))
+
+
+@dataclasses.dataclass
+class AggResult:
+    op: str
+    count: int = 0
+    total: int = 0
+    min_value: Optional[bytes] = None
+    max_value: Optional[bytes] = None
+    groups: Optional[List[Tuple[bytes, int]]] = None  # sorted, top-k applied
+
+    @property
+    def value(self):
+        """The scalar answer for scalar ops (ergonomic accessor)."""
+        return {"count": self.count, "sum": self.total,
+                "min": self.min_value, "max": self.max_value,
+                "group_count": self.groups}[self.op]
+
+
+def merge_partials(parts: List[AggPartial]) -> AggPartial:
+    out = AggPartial()
+    for p in parts:
+        out = out.merge(p)
+    return out
+
+
+def finalize_partial(spec: AggSpec, part: AggPartial) -> AggResult:
+    res = AggResult(spec.op, count=part.count, total=part.total,
+                    min_value=part.min_value, max_value=part.max_value)
+    if spec.op == "group_count":
+        items = sorted((part.groups or {}).items(),
+                       key=lambda kv: (-kv[1], kv[0]))
+        if spec.top_k is not None:
+            items = items[:spec.top_k]
+        res.groups = items
+    return res
+
+
+def numeric_values(vals: np.ndarray) -> np.ndarray:
+    """int64 numeric weight per value: the first contiguous ASCII-digit
+    run parsed as an integer, clipped to int32 max (so the per-code
+    weight fits the kernels' int32 gather table); no digits -> 0.
+
+    Vectorized over rows; the only Python loop is over the fixed value
+    width.  This is the single definition of SUM semantics — the
+    executor, the kernel weight tables, and the test oracles all call
+    it.
+    """
+    vals = np.ascontiguousarray(vals)
+    n = vals.shape[0]
+    if n == 0:
+        return np.zeros(0, np.int64)
+    w = vals.dtype.itemsize
+    b = np.frombuffer(vals.tobytes(), np.uint8).reshape(n, w)
+    digit = (b >= 48) & (b <= 57)
+    started = np.cumsum(digit, axis=1) > 0
+    ended = np.cumsum(started & ~digit, axis=1) > 0
+    in_run = digit & ~ended  # first digit run only
+    out = np.zeros(n, np.int64)
+    for j in range(w):
+        d = in_run[:, j]
+        out[d] = out[d] * 10 + (b[d, j].astype(np.int64) - 48)
+        np.minimum(out, INT32_MAX, out=out)  # clip keeps the fold bounded
+    return out
+
+
+def prefix_labels(vals: np.ndarray, prefix_len: int) -> np.ndarray:
+    """Group label per value for 'prefix' grouping (S-dtype truncation)."""
+    return np.ascontiguousarray(vals).astype(f"S{prefix_len}")
+
+
+def bucket_ids(vals: np.ndarray, edges: Tuple[bytes, ...]) -> np.ndarray:
+    """Bucket id per value for 'bucket' grouping: #(interior edges <= v).
+
+    Truncation care mirrors ``filter_exec._lower_mask``: an edge longer
+    than the value width is compared exclusively after truncation, so
+    every codec (and the oracle) buckets identically.
+    """
+    vals = np.ascontiguousarray(vals)
+    w = vals.dtype.itemsize
+    ids = np.zeros(vals.shape[0], np.int64)
+    for e in edges:
+        bound = np.asarray([e], f"S{w}")[0]
+        ids += (vals > bound) if len(e) > w else (vals >= bound)
+    return ids

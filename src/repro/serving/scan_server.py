@@ -24,6 +24,14 @@ batch then pins ONE cross-shard snapshot vector and rides one
 ``filter_many`` per shard (scatter on the shard executor's thread pool,
 one ``multi_filter`` launch per shard per run on 'jax_packed'), so
 batching amortization and shard parallelism compose.
+
+Aggregates ride the same batches: ``submit_agg`` enqueues an
+``AggSpec`` next to the filter requests, and ``step`` executes the
+batch's aggregate slots through ``aggregate_many`` against the SAME
+pinned snapshot as its filter slots — an HTAP round's point lookups,
+scans, and group-bys all observe one consistent version.  The result
+dict then maps rid -> ``FilterResult`` or ``AggResult`` depending on
+what was submitted.
 """
 
 from __future__ import annotations
@@ -35,6 +43,7 @@ from typing import Dict, List, Optional, Union
 from repro.core.filter_exec import FilterResult
 from repro.core.lsm import LSMTree, Snapshot
 from repro.core.opd import Predicate
+from repro.query import AggResult, AggSpec
 
 try:  # engine surface the server needs: filter_many + snapshot
     from repro.shard.sharded_lsm import ShardedLSM, ShardSnapshot
@@ -52,6 +61,18 @@ class ScanRequest:
     submitted_at: float = 0.0
     result: Optional[FilterResult] = None
     done: bool = False
+
+
+@dataclasses.dataclass
+class AggRequest:
+    rid: int
+    spec: AggSpec
+    submitted_at: float = 0.0
+    result: Optional[AggResult] = None
+    done: bool = False
+
+
+QueryResult = Union[FilterResult, AggResult]
 
 
 @dataclasses.dataclass
@@ -88,7 +109,7 @@ class ScanServer:
         self.tree = tree
         self.max_batch = max_batch
         self.maintenance = maintenance
-        self.queue: List[ScanRequest] = []
+        self.queue: List[Union[ScanRequest, AggRequest]] = []
         self.stats = ScanServerStats()
         self._next_rid = 0
 
@@ -106,26 +127,46 @@ class ScanServer:
     def submit_many(self, preds: List[Predicate]) -> List[int]:
         return [self.submit(p) for p in preds]
 
+    def submit_agg(self, spec: AggSpec) -> int:
+        """Enqueue one aggregate; batched with filters in ``step``."""
+        rid = self._next_rid
+        self._next_rid += 1
+        self.queue.append(AggRequest(rid, spec, time.perf_counter()))
+        self.stats.n_submitted += 1
+        return rid
+
+    def submit_aggs(self, specs: List[AggSpec]) -> List[int]:
+        return [self.submit_agg(s) for s in specs]
+
     # ------------------------------------------------------------------ #
     # server side
     # ------------------------------------------------------------------ #
     def step(self, snapshot: Optional[AnySnapshot] = None
-             ) -> Dict[int, FilterResult]:
+             ) -> Dict[int, QueryResult]:
         """Fill up to ``max_batch`` slots from the queue and execute them
-        as ONE batched filter against a single pinned snapshot."""
+        as ONE batched filter + ONE batched aggregate, both against a
+        single pinned snapshot."""
         if not self.queue:
             return {}
         if self.maintenance == "sync" and hasattr(self.tree, "drain"):
             self.tree.drain()  # observe a fully maintained tree
         slots = self.queue[: self.max_batch]
+        scans = [r for r in slots if isinstance(r, ScanRequest)]
+        aggs = [r for r in slots if isinstance(r, AggRequest)]
+        if snapshot is None:
+            # pin here, not inside the engine calls, so the batch's
+            # filters and aggregates observe one consistent version
+            snapshot = self.tree.snapshot()
         now = time.perf_counter()
-        # dequeue only after the batch succeeds: a failing filter_many
+        # dequeue only after the batch succeeds: a failing engine call
         # leaves the requests queued for a retry instead of losing them
-        results = self.tree.filter_many([r.pred for r in slots],
-                                        snapshot=snapshot)
+        filter_res = self.tree.filter_many(
+            [r.pred for r in scans], snapshot=snapshot) if scans else []
+        agg_res = self.tree.aggregate_many(
+            [r.spec for r in aggs], snapshot=snapshot) if aggs else []
         del self.queue[: len(slots)]
-        out: Dict[int, FilterResult] = {}
-        for r, res in zip(slots, results):
+        out: Dict[int, QueryResult] = {}
+        for r, res in list(zip(scans, filter_res)) + list(zip(aggs, agg_res)):
             r.result = res
             r.done = True
             out[r.rid] = res
@@ -135,15 +176,15 @@ class ScanServer:
         self.stats.batch_sizes.append(len(slots))
         return out
 
-    def drain(self) -> Dict[int, FilterResult]:
+    def drain(self) -> Dict[int, QueryResult]:
         """Step until the queue is empty (continuous batching: each step
         re-fills from whatever has been submitted since)."""
-        out: Dict[int, FilterResult] = {}
+        out: Dict[int, QueryResult] = {}
         while self.queue:
             out.update(self.step())
         return out
 
-    def run(self, preds: List[Predicate]) -> Dict[int, FilterResult]:
+    def run(self, preds: List[Predicate]) -> Dict[int, QueryResult]:
         """Convenience: submit a workload and drain it."""
         self.submit_many(preds)
         return self.drain()

@@ -45,7 +45,7 @@ from repro.storage.devices import DeviceModel
 from repro.storage.io import FileStore
 
 _STAGE_STATS = ("filter_stats", "compaction_stats", "flush_stats",
-                "lookup_stats", "throttle_stats")
+                "lookup_stats", "throttle_stats", "agg_stats")
 _COUNTERS = ("n_flushes", "n_compactions", "write_stalls", "stall_seconds",
              "write_slowdowns", "slowdown_seconds", "cascade_truncations",
              "dict_compares", "compaction_in_bytes", "compaction_out_bytes",
@@ -258,6 +258,10 @@ class ShardedLSM:
     def lookup_stats(self) -> StageStats:
         return self._stage("lookup_stats")
 
+    @property
+    def agg_stats(self) -> StageStats:
+        return self._stage("agg_stats")
+
     # ------------------------------------------------------------------ #
     # writes
     # ------------------------------------------------------------------ #
@@ -429,6 +433,41 @@ class ShardedLSM:
             snap.entries(), snap)
         return [self._gather([shard_res[q] for shard_res in per_shard])
                 for q in range(len(preds))]
+
+    def aggregate(self, spec, snapshot: Optional[ShardSnapshot] = None):
+        """One aggregate, scatter-gathered -> ``AggResult``."""
+        return self.aggregate_many([spec], snapshot)[0]
+
+    def aggregate_many(self, specs,
+                       snapshot: Optional[ShardSnapshot] = None):
+        """Batched scatter-gather aggregation: bucket groupings are
+        resolved ONCE over every pinned shard's value domain (so shard
+        partials share labels), each shard reduces the whole spec batch
+        to mergeable ``AggPartial``s against its pinned snapshot, and
+        partials merge associatively in shard order.  Top-k is applied
+        only after the merge — a shard-local top-k could drop a group
+        that is globally top-k."""
+        from repro.query import finalize_partial, merge_partials, resolve_specs
+        from repro.query.planner import collect_domain
+
+        specs = list(specs)
+        snap = snapshot or self.snapshot()
+        if any(spec.group is not None and not spec.group.resolved()
+               for spec in specs):
+            with self.agg_stats.time("plan"):
+                domains = [collect_domain(t_snap.runs, t_snap.mems,
+                                          tree.blob_mgr, self.cfg.value_width)
+                           for tree, t_snap in snap.entries()]
+                domains = [d for d in domains if d.shape[0]]
+                domain = (np.unique(np.concatenate(domains)) if domains
+                          else np.zeros(0, f"S{self.cfg.value_width}"))
+            specs = resolve_specs(specs, domain)
+        per_shard = self._scan_map(
+            lambda e: e[0].aggregate_partials(specs, snapshot=e[1]),
+            snap.entries(), snap)
+        return [finalize_partial(
+                    spec, merge_partials([parts[q] for parts in per_shard]))
+                for q, spec in enumerate(specs)]
 
     def range_lookup(self, lo: int, hi: int,
                      snapshot: Optional[ShardSnapshot] = None

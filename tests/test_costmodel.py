@@ -3,8 +3,9 @@ paper's worked example, and qualitative orderings the analysis claims."""
 
 import math
 
-from repro.core.costmodel import (CostParams, border_ndv, compaction_cpu,
-                                  compaction_io, filter_cpu, filter_io,
+from repro.core.costmodel import (CostParams, aggregate_cpu, aggregate_io,
+                                  border_ndv, compaction_cpu, compaction_io,
+                                  filter_cpu, filter_io,
                                   inequality_I1_border, inequality_I1_holds)
 
 
@@ -58,3 +59,49 @@ def test_filter_cpu_simd_win():
 def test_filter_io_ordering():
     io = filter_io(CostParams())
     assert io["opd"] < io["plain"]
+
+
+def test_aggregate_cpu_ordering():
+    """Aggregating on packed codes must be far below decode-then-
+    aggregate at the paper's operating point; heavy pays decompression
+    on top of plain."""
+    cpu = aggregate_cpu(CostParams())
+    assert cpu["opd"] < cpu["plain"] / 5
+    assert cpu["heavy"] > cpu["plain"]
+
+
+def test_aggregate_cpu_ndv_sensitivity():
+    """The dictionary-table term grows with NDV: at pathological NDV
+    (every value distinct per file) the OPD advantage collapses."""
+    lo = aggregate_cpu(CostParams(D_i=10_000))
+    hi = aggregate_cpu(CostParams(D_i=1_600_000))
+    assert lo["opd"] < hi["opd"]
+    assert hi["opd"] > hi["plain"] / 5  # advantage mostly gone
+
+
+def test_aggregate_io_zone_skip_monotone():
+    p = CostParams()
+    io0 = aggregate_io(p, zone_skip=0.0)
+    io5 = aggregate_io(p, zone_skip=0.5)
+    io1 = aggregate_io(p, zone_skip=1.0)
+    assert io0["opd"] < io0["plain"]
+    assert io0["opd"] > io5["opd"] > io1["opd"]
+    # with every tile short-circuited only the dictionaries are read
+    assert io1["opd"] == p.m_opd * p.D_i * p.S_V
+
+
+def test_aggregate_model_matches_bench_htap():
+    """The model's codes-scanned vs values-decoded prediction must agree
+    in *direction* with a (tiny) measured bench_htap A/B: OPD packed
+    aggregation beats decode-then-aggregate, plain does not."""
+    from benchmarks import bench_htap
+
+    cpu = aggregate_cpu(CostParams(N=6_000, S_V=128, D_i=60))
+    assert cpu["opd"] < cpu["plain"]  # model predicts the OPD win
+    rows = bench_htap.run(n_load=6_000, n_rounds=1, ops_per_round=100,
+                          n_ab=2, systems=["lsm_opd", "rocks_plain"])
+    by_name = {r.name: r.derived for r in rows}
+    assert by_name["htap/lsm_opd"]["agg_speedup"] > 1.0
+    # the competitor gains nothing from the aggregate path vs decoding
+    assert by_name["htap/rocks_plain"]["agg_speedup"] < \
+        by_name["htap/lsm_opd"]["agg_speedup"]
