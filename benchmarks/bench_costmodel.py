@@ -10,7 +10,8 @@ from typing import List
 from benchmarks._harness import BenchRow, build_tree, load_tree
 from repro.core.costmodel import (CostParams, border_ndv, compaction_cpu,
                                   compaction_io, filter_cpu,
-                                  inequality_I1_border)
+                                  inequality_I1_border, policy_levels,
+                                  policy_read_runs, policy_write_amp)
 
 
 def run(n: int = 50_000, width: int = 64) -> List[BenchRow]:
@@ -26,6 +27,18 @@ def run(n: int = 50_000, width: int = 64) -> List[BenchRow]:
         "compact_io_plain_over_opd": cio["plain"] / cio["opd"],
         "filter_cpu_plain_over_opd": fc["plain"] / fc["opd"],
     }))
+    # ---- per-policy closed forms (docs/DESIGN.md §12) -------------------- #
+    T, K = p.T, 4
+    L = policy_levels(p)
+    pol = {}
+    for kind in ("leveled", "tiered", "lazy_leveled"):
+        pol[f"write_amp_{kind}"] = policy_write_amp(kind, T, K, L)
+        pol[f"read_runs_{kind}"] = policy_read_runs(kind, T, K, L)
+    rows.append(BenchRow("costmodel/policy_analytic", 0.0, pol))
+    # the tradeoff the tuner exploits, asserted in-bench: tiering must
+    # win writes and lose scans relative to leveling at the same (T, K)
+    assert pol["write_amp_tiered"] < pol["write_amp_leveled"]
+    assert pol["read_runs_tiered"] > pol["read_runs_leveled"]
     # ---- empirical I1 sweep --------------------------------------------- #
     for ndv_ratio in (0.005, 0.02, 0.08, 0.3, 0.8):
         t_opd = build_tree("lsm_opd", width)

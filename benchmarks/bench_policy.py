@@ -1,0 +1,276 @@
+"""Compaction-policy sweep + adaptive per-shard tuning headline.
+
+Two experiments (docs/EXPERIMENTS.md §bench-policy):
+
+* ``run``: policy x size-ratio sweep on one tree.  Write-heavy leg
+  measures ingest throughput and the *measured* write amplification
+  (store bytes written / logical bytes ingested); scan-heavy leg
+  measures filter + range-scan latency over the same final dataset.
+  Each cell also carries the cost model's per-policy write/scan units,
+  so the CSV doubles as a model-vs-measured calibration table, and the
+  read results of every cell are asserted bit-identical to the leveled
+  baseline (the policy axis must be invisible to readers).
+
+* ``run_adaptive``: the tuner's headline.  Four shards, skewed traffic —
+  puts hammer the low half of the keyspace (shards 0-1, plus an update
+  trickle into the high half), point gets probe the high half (shards
+  2-3).  A ``policy_autotune`` engine lets each shard's ``PolicyTuner``
+  pick its own policy (write-hot shards drift to tiering, read-hot
+  shards hold leveling) and races fixed global-policy engines over the
+  identical op sequence.  Non-smoke runs assert the adaptive engine
+  beats the best global policy on combined throughput (the >= 1.2x
+  bar) and that the cost model's ranking matches the measured
+  best/worst global.
+
+    PYTHONPATH=src:. python benchmarks/bench_policy.py [--n N] [--smoke]
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from benchmarks._harness import BenchRow, gen_keys, gen_values, timed
+from repro.core import LSMConfig, LSMTree, Predicate
+from repro.core import costmodel as cm
+from repro.query import AggSpec
+from repro.shard import ShardedLSM
+
+VW = 32
+PRED = Predicate("prefix", b"cat_0")
+
+POLICIES = {
+    "leveled": dict(compaction_policy="leveled"),
+    "tiered": dict(compaction_policy="tiered", tier_runs=4),
+    "lazy_leveled": dict(compaction_policy="lazy_leveled", tier_runs=4),
+    "hybrid": dict(compaction_policy="hybrid",
+                   level_modes=("L", "T", "T", "L", "L", "L")),
+}
+CHUNK = 2000  # ingest batch: maintenance interleaves at flush granularity
+
+
+def _cfg(T: int, **kw) -> LSMConfig:
+    return LSMConfig(codec="opd", value_width=VW, memtable_bytes=64 * 1024,
+                     file_bytes=128 * 1024, l0_limit=3, size_ratio=T,
+                     max_levels=6, **kw)
+
+
+def _fingerprint(eng):
+    fr = eng.filter(PRED)
+    r = eng.aggregate_many([AggSpec("count"), AggSpec("sum")])
+    return (fr.keys.tolist(), fr.values.tolist(),
+            r[0].count, r[1].total)
+
+
+def _model_units(pol: Dict, T: int, n: int) -> Dict[str, float]:
+    """Cost-model write/scan units for one (policy, T) cell."""
+    p = cm.CostParams(N=n, F=128 * 1024, S_V=VW)
+    kind = pol["compaction_policy"]
+    K = pol.get("tier_runs", 4)
+    modes = pol.get("level_modes")
+    return {
+        "model_write_unit": cm.policy_cost(
+            p, kind, T=T, K=K, w_write=1.0, w_scan=0.0, level_modes=modes),
+        "model_scan_unit": cm.policy_cost(
+            p, kind, T=T, K=K, w_write=0.0, w_scan=1.0, level_modes=modes),
+    }
+
+
+# --------------------------------------------------------------------------- #
+# experiment 1: policy x size-ratio sweep (single tree)
+# --------------------------------------------------------------------------- #
+def run(n: int = 60_000, ratios=(4, 8), scan_ops: int = 30,
+        smoke: bool = False) -> List[BenchRow]:
+    rows: List[BenchRow] = []
+    keys = gen_keys(n)
+    vals = gen_values(n, VW, ndv_ratio=0.01)
+    baseline = None
+    measured: Dict[tuple, Dict[str, float]] = {}
+    for T in ratios:
+        for name, pol in POLICIES.items():
+            with LSMTree(_cfg(T, **pol)) as tree:
+                t0 = time.perf_counter()
+                for lo in range(0, n, CHUNK):
+                    tree.put_batch(keys[lo:lo + CHUNK],
+                                   vals[lo:lo + CHUNK])
+                tree.flush()
+                tree.compact()
+                write_s = time.perf_counter() - t0
+                wa = tree.store.stats.bytes_written \
+                    / max(1, tree.ingest_bytes)
+                t0 = time.perf_counter()
+                for _ in range(scan_ops):
+                    tree.filter(PRED)
+                tree.range_lookup(0, 1 << 62)
+                scan_s = time.perf_counter() - t0
+                fp = _fingerprint(tree)
+                depths = tree.shape_report()["run_depths"]
+                d = {
+                    "ingest_kops": n / write_s / 1e3,
+                    "write_amp_measured": wa,
+                    "scan_ms_per_op": scan_s / (scan_ops + 1) * 1e3,
+                    "max_run_depth": float(max(depths[1:], default=0)),
+                    **_model_units(pol, T, n),
+                }
+                measured[(name, T)] = d
+                rows.append(BenchRow(f"policy/{name}_T{T}", 0.0, d))
+            if baseline is None:
+                baseline = fp
+            else:  # the policy axis must be invisible to readers
+                assert fp == baseline, f"{name}/T={T} diverged from leveled"
+
+    # direction check, model vs measured (write amp is deterministic):
+    # tiering must cut measured write amplification under leveling at
+    # every T, exactly as the closed forms rank them
+    for T in ratios:
+        lv, tr = measured[("leveled", T)], measured[("tiered", T)]
+        assert tr["model_write_unit"] < lv["model_write_unit"]
+        assert tr["write_amp_measured"] < lv["write_amp_measured"], \
+            f"T={T}: tiered measured WA not below leveled"
+        assert lv["model_scan_unit"] <= tr["model_scan_unit"]
+    return rows
+
+
+# --------------------------------------------------------------------------- #
+# experiment 2: adaptive per-shard tuning vs best global policy
+# --------------------------------------------------------------------------- #
+ADAPT_POLICIES = {  # deep stacking (K=8) so the read tax is measurable
+    "leveled": dict(compaction_policy="leveled"),
+    "tiered": dict(compaction_policy="tiered", tier_runs=8),
+    "lazy_leveled": dict(compaction_policy="lazy_leveled", tier_runs=8),
+    "hybrid": dict(compaction_policy="hybrid", tier_runs=8,
+                   level_modes=("L", "T", "T", "L", "L", "L")),
+}
+
+
+def _adapt_cfg(**kw) -> LSMConfig:
+    """Small memtable/files -> deep trees, so compaction shape actually
+    matters at bench scale; l0_limit=2 keeps a leveled L0 tight while a
+    tiered L0 legitimately stacks K-1 runs (the policy-relative
+    throttle makes that legal)."""
+    return LSMConfig(codec="opd", value_width=VW, memtable_bytes=16 * 1024,
+                     file_bytes=32 * 1024, l0_limit=2, size_ratio=8,
+                     max_levels=6, **kw)
+
+
+def _mixed_round(eng, keys, vals, get_keys) -> int:
+    """One round of the skewed mixed workload; returns ops performed.
+    Point gets are the read op that pays per overlapping run (every
+    stacked run covering the key costs a bloom probe + candidate block
+    search), so they are where tiering's read tax is measurable."""
+    eng.put_batch(keys, vals)
+    for k in get_keys:
+        eng.get(int(k))
+    eng.compact_all()  # round barrier = the tuner's retune hook
+    return keys.shape[0] + get_keys.shape[0]
+
+
+def run_adaptive(n: int = 120_000, rounds: int = 10, gets: int = 2000,
+                 smoke: bool = False) -> List[BenchRow]:
+    key_max = 1 << 20
+    half = key_max // 2
+    rng = np.random.default_rng(3)
+    per_round = n // rounds
+    trickle = per_round // 6
+    # preload: both halves populated so reads have real data to probe
+    base_keys = rng.integers(0, key_max, n // 2, dtype=np.uint64)
+    base_vals = gen_values(n // 2, VW, ndv_ratio=0.01, seed=9)
+    # rounds: puts hammer the LOW half (shards 0-1) with a ~17% trickle
+    # into the HIGH half (scan-hot shards still see some updates — that
+    # trickle is what keeps them stacked under a global tiering policy);
+    # point gets probe the HIGH half, drawn from the preloaded keys
+    wkeys, wvals = [], []
+    for r in range(rounds):
+        lo = rng.integers(0, half, per_round - trickle, dtype=np.uint64)
+        hi = rng.integers(half, key_max, trickle, dtype=np.uint64)
+        wkeys.append(np.concatenate([lo, hi]))
+        wvals.append(gen_values(per_round, VW, ndv_ratio=0.01, seed=10 + r))
+    hi_keys = base_keys[base_keys >= half]
+    gkeys = [rng.choice(hi_keys, gets) for _ in range(rounds)]
+    warm_keys = rng.choice(hi_keys, 400)
+
+    engines = {"adaptive": dict(policy_autotune=True, tier_runs=8)}
+    engines.update(ADAPT_POLICIES)
+    rows: List[BenchRow] = []
+    times: Dict[str, float] = {}
+    fps = {}
+    n_switches = {}
+    for name, pol in engines.items():
+        cfg = _adapt_cfg(**pol)
+        with ShardedLSM(cfg, n_shards=4, key_max=key_max) as eng:
+            eng.put_batch(base_keys, base_vals)
+            for k in warm_keys:  # balanced warmup window: the tuner sees
+                eng.get(int(k))  # read traffic before its first retune
+            eng.compact_all()
+            ops = 0
+            t0 = time.perf_counter()
+            for r in range(rounds):
+                ops += _mixed_round(eng, wkeys[r], wvals[r], gkeys[r])
+            dt = time.perf_counter() - t0
+            times[name] = dt
+            fps[name] = _fingerprint(eng)
+            rep = eng.shape_report()
+            n_switches[name] = rep["n_policy_switches"]
+            rows.append(BenchRow(f"policy/mixed_{name}", 0.0, {
+                "throughput_kops": ops / dt / 1e3,
+                "wall_s": dt,
+                "n_policy_switches": float(rep["n_policy_switches"]),
+                "n_retunes": float(rep.get("n_retunes", 0)),
+            }))
+
+    for name, fp in fps.items():  # cross-policy identity, mixed workload
+        assert fp == fps["leveled"], f"{name} diverged on mixed workload"
+
+    globals_only = {k: v for k, v in times.items() if k != "adaptive"}
+    best = min(globals_only, key=globals_only.get)
+    worst = max(globals_only, key=globals_only.get)
+    ratio = globals_only[best] / times["adaptive"]
+    rows.append(BenchRow("policy/adaptive_over_best_global", 0.0, {
+        "speedup": ratio,
+        "best_global_is_leveled": float(best == "leveled"),
+    }))
+    if not smoke:
+        assert n_switches["adaptive"] >= 1, \
+            "tuner never migrated a shard on the skewed mixed workload"
+        assert ratio >= 1.2, \
+            f"adaptive {ratio:.2f}x vs best global ({best}) — below 1.2x"
+        # model ranking vs measured ranking on the global extremes: the
+        # mixed workload is write-dominated per wall second, so the
+        # model's combined cost (write-weighted) must agree on the
+        # best/worst global policy ordering
+        p = cm.CostParams(N=n, F=32 * 1024, S_V=VW)
+
+        def model(kind):
+            pol = ADAPT_POLICIES[kind]
+            return cm.policy_cost(
+                p, pol["compaction_policy"], T=8,
+                K=pol.get("tier_runs", 4), w_write=1.0,
+                w_scan=float(rounds * gets) / max(1, n),
+                level_modes=pol.get("level_modes"))
+
+        assert model(best) <= model(worst), \
+            f"cost model ranks {best} above {worst}, measurement disagrees"
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=60_000)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny fast run; keeps every identity assert")
+    args = ap.parse_args()
+    n = 10_000 if args.smoke else args.n
+    for r in run(n=n, smoke=args.smoke):
+        print(r.csv())
+    for r in run_adaptive(n=max(20_000, 2 * n) if not args.smoke else 16_000,
+                          rounds=6 if args.smoke else 10,
+                          gets=400 if args.smoke else 1500,
+                          smoke=args.smoke):
+        print(r.csv())
+
+
+if __name__ == "__main__":
+    main()

@@ -5,6 +5,7 @@
 from repro.core.lsm import LSMConfig, LSMTree, Snapshot
 from repro.core.maintenance import MaintenanceError, MaintenanceScheduler
 from repro.core.opd import OPD, Predicate, as_fixed_bytes
+from repro.core.policy import CompactionPolicy, PolicyTuner, run_depth
 from repro.core.sct import SCT, bitpack, bitunpack, pack_width
 from repro.core.stats import StageStats
 from repro.core.version import Version, VersionEdit, VersionSet
@@ -13,6 +14,7 @@ from repro.core.wal import WALRecord, WALWriter, wal_prefix_for
 __all__ = [
     "LSMConfig", "LSMTree", "Snapshot", "OPD", "Predicate", "as_fixed_bytes",
     "SCT", "bitpack", "bitunpack", "pack_width", "StageStats",
+    "CompactionPolicy", "PolicyTuner", "run_depth",
     "Version", "VersionEdit", "VersionSet",
     "MaintenanceScheduler", "MaintenanceError",
     "WALRecord", "WALWriter", "wal_prefix_for",

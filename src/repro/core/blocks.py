@@ -58,6 +58,10 @@ class BlockIndex:
     # code-range zone map ('opd' only; None for other codecs)
     code_lo: Optional[np.ndarray] = None   # uint32 [n_blocks]
     code_hi: Optional[np.ndarray] = None   # uint32 [n_blocks]
+    # per-block SUM weight totals (numeric value per live entry, summed
+    # per 4 KB block) — gives SUM the same closed-form tile short-circuit
+    # that count/min/max get from the code zones
+    weight_sums: Optional[np.ndarray] = None  # int64 [n_blocks]
 
     @property
     def n_blocks(self) -> int:
@@ -73,6 +77,8 @@ class BlockIndex:
                     + self.bloom_words.nbytes)
         if self.has_zones:
             total += int(self.code_lo.nbytes + self.code_hi.nbytes)
+        if self.weight_sums is not None:
+            total += int(self.weight_sums.nbytes)
         return total
 
     # ------------------------------------------------------------------ #
@@ -164,6 +170,19 @@ class BlockIndex:
             lo[: edges.shape[0]] = np.minimum.reduceat(packed_values, edges)
             hi[: edges.shape[0]] = np.maximum.reduceat(packed_values, edges)
         self.code_lo, self.code_hi = lo, hi
+
+    def attach_weight_sums(self, entry_weights: np.ndarray) -> None:
+        """Per-block totals of ``entry_weights`` (int64 [n], the numeric
+        SUM weight per entry, 0 at tombstones).  A block whose code zone
+        a SUM range contains then contributes its weight total in closed
+        form — no code word read, no dictionary gather."""
+        n = entry_weights.shape[0]
+        ws = np.zeros(self.n_blocks, np.int64)
+        if n:
+            edges = np.arange(0, n, self.entries_per_block)
+            ws[: edges.shape[0]] = np.add.reduceat(
+                entry_weights.astype(np.int64), edges)
+        self.weight_sums = ws
 
     def zone_prunable(self, ranges: np.ndarray) -> np.ndarray:
         """bool [n_blocks]: True where NO inclusive [lo, hi] range in

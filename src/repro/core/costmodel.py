@@ -16,7 +16,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict
+from typing import Dict, Optional
 
 
 @dataclasses.dataclass(frozen=True)
@@ -136,6 +136,121 @@ def aggregate_io(p: CostParams, zone_skip: float = 0.0) -> Dict[str, float]:
     codes = p.N * p.S_O * (1.0 - zone_skip)
     dicts = p.m_opd * p.D_i * p.S_V
     return {"plain": plain, "heavy": heavy, "opd": float(codes + dicts)}
+
+
+# --------------------------------------------------------------------------- #
+# per-policy closed forms (Sarkar et al. design space; docs/DESIGN.md §12)
+# --------------------------------------------------------------------------- #
+def policy_levels(p: CostParams, T: Optional[int] = None,
+                  record_bytes: Optional[float] = None) -> int:
+    """Tree depth L for N records under size ratio T (both policies fill
+    the same total bytes; tiering just holds them as K runs/level)."""
+    T = T if T is not None else p.T
+    rec = record_bytes if record_bytes is not None else (p.S_K + p.S_O)
+    data = max(1.0, p.N * rec / p.F)
+    return max(1, math.ceil(math.log(data, max(2, T))))
+
+
+def policy_write_amp(policy: str, T: int, K: int, L: int,
+                     level_modes=None) -> float:
+    """Times each ingested byte is rewritten by compaction (per Sarkar et
+    al. / Dostoevsky): leveling rewrites a level's resident data ~T times
+    before it overflows, tiering once per level, lazy-leveling pays the
+    leveled price only at the bottom."""
+    if policy == "leveled":
+        return float(T) * L
+    if policy == "tiered":
+        return float(L)
+    if policy == "lazy_leveled":
+        return float(L - 1) + T
+    if policy == "hybrid":
+        modes = level_modes or ()
+        amp = 0.0
+        for i in range(L):
+            m = modes[min(i, len(modes) - 1)] if modes else "L"
+            amp += float(T) if m == "L" else 1.0
+        return amp
+    raise ValueError(policy)
+
+
+def policy_read_runs(policy: str, T: int, K: int, L: int,
+                     level_modes=None) -> float:
+    """Sorted runs a scan must consult: 1/level under leveling, up to K
+    under tiering (lazy-leveling: K per upper level + 1 at the bottom)."""
+    if policy == "leveled":
+        return float(L)
+    if policy == "tiered":
+        return float(K) * L
+    if policy == "lazy_leveled":
+        return float(K) * max(0, L - 1) + 1
+    if policy == "hybrid":
+        modes = level_modes or ()
+        runs = 0.0
+        for i in range(L):
+            m = modes[min(i, len(modes) - 1)] if modes else "L"
+            runs += 1.0 if m == "L" else float(K)
+        return runs
+    raise ValueError(policy)
+
+
+def policy_compaction_io(p: CostParams, policy: str,
+                         T: Optional[int] = None, K: Optional[int] = None,
+                         level_modes=None) -> float:
+    """Total compaction bytes for ingesting N records under (policy, T,
+    K): ingested bytes x write amplification (read+write charged once,
+    matching ``compaction_io``'s leveled structure)."""
+    T = T if T is not None else p.T
+    K = K if K is not None else 4
+    L = policy_levels(p, T)
+    return p.N * (p.S_K + p.S_O) * policy_write_amp(
+        policy, T, K, L, level_modes)
+
+
+def policy_compaction_cpu(p: CostParams, policy: str,
+                          T: Optional[int] = None, K: Optional[int] = None,
+                          level_modes=None) -> float:
+    """Merge CPU: key merge-sort + dictionary rebuild per rewrite pass
+    (the §4.2.1 OPD expression with the leveled ``levels_of * T`` factor
+    replaced by the policy's write amplification)."""
+    T = T if T is not None else p.T
+    K = K if K is not None else 4
+    L = policy_levels(p, T)
+    amp = policy_write_amp(policy, T, K, L, level_modes)
+    per_byte = p.S_K * p.C_K / max(1, p.S_K + p.S_O)
+    dict_term = p.S_V * p.C_S * p.D_i * math.log2(max(p.D_i, 2)) \
+        * (amp * p.N * (p.S_K + p.S_O) / p.F) / max(1, p.m_opd)
+    return p.N * (p.S_K + p.S_O) * amp * (per_byte + p.C_C) + dict_term
+
+
+def policy_scan_io(p: CostParams, policy: str,
+                   T: Optional[int] = None, K: Optional[int] = None,
+                   zone_skip: float = 0.0, level_modes=None) -> float:
+    """Bytes one full scan reads under (policy, T, K): every run costs
+    its code column (zone short-circuits skip ``zone_skip`` of it) plus
+    a per-run dictionary + seek overhead — more runs, more overhead."""
+    T = T if T is not None else p.T
+    K = K if K is not None else 4
+    L = policy_levels(p, T)
+    runs = policy_read_runs(policy, T, K, L, level_modes)
+    codes = p.N * p.S_O * (1.0 - zone_skip)
+    per_run = p.D_i * p.S_V + p.F * 0.01  # dict + fixed per-run overhead
+    return codes + runs * per_run
+
+
+def policy_cost(p: CostParams, policy: str, T: Optional[int] = None,
+                K: Optional[int] = None, *, w_write: float,
+                w_scan: float, zone_skip: float = 0.0,
+                level_modes=None) -> float:
+    """Combined workload cost for the tuner: write work weighted by the
+    observed ingest volume + scan work weighted by the observed scan op
+    count.  Normalized per unit of each weight so the mix (not the
+    absolute traffic) decides the ranking."""
+    ingested = max(1.0, p.N * (p.S_K + p.S_O))
+    write_unit = (policy_compaction_io(p, policy, T, K, level_modes)
+                  + policy_compaction_cpu(p, policy, T, K, level_modes)) \
+        / ingested
+    scan_unit = policy_scan_io(p, policy, T, K, zone_skip, level_modes)
+    return w_write * write_unit + w_scan * scan_unit
 
 
 def inequality_I1_border(p: CostParams) -> float:

@@ -57,6 +57,8 @@ from repro.core.maintenance import (THROTTLE_NONE, THROTTLE_SLOWDOWN,
                                     THROTTLE_STOP, MaintenanceScheduler)
 from repro.core.memtable import MemTable
 from repro.core.opd import Predicate
+from repro.core.policy import (CompactionPolicy, PolicyTuner, make_policy,
+                               run_depth)
 from repro.core.sct import SCT, BlobManager, build_sct, record_disk_bytes
 from repro.core.stats import StageStats
 from repro.core.version import Version, VersionEdit, VersionSet
@@ -82,6 +84,11 @@ class LSMConfig:
     blob_gc_threshold: float = 0.5
     filter_backend: str = "numpy"      # 'numpy' | 'jax' | 'jax_packed' | 'fused'
     compaction_backend: str = "numpy"  # 'numpy' | 'jax' | 'jax_packed'
+    # --- compaction policy engine (docs/DESIGN.md §12) ---
+    compaction_policy: str = "leveled"  # | 'tiered' | 'lazy_leveled' | 'hybrid'
+    tier_runs: int = 4                  # K: runs per tiered level
+    level_modes: Optional[Tuple[str, ...]] = None  # hybrid 'L'/'T' vector
+    policy_autotune: bool = False       # online PolicyTuner per tree
     # --- maintenance pipeline (docs/DESIGN.md §9) ---
     maintenance: str = "sync"          # 'sync' | 'background'
     l0_slowdown: Optional[int] = None  # default: l0_limit + 4
@@ -171,6 +178,12 @@ class LSMTree:
         self._lock = threading.RLock()
         self._seqno = 0
         self._cursors: Dict[int, int] = {}  # round-robin compaction cursors
+        # compaction policy (docs/DESIGN.md §12): an immutable value the
+        # trigger/victim/output hooks consult; ``set_policy`` swaps it
+        # and future compactions migrate the tree toward the new shape
+        self.policy: CompactionPolicy = make_policy(cfg)
+        self.tuner: Optional[PolicyTuner] = (
+            PolicyTuner() if cfg.policy_autotune else None)
         # maintenance mode
         self._owns_sched = False
         if cfg.maintenance == "background":
@@ -201,6 +214,7 @@ class LSMTree:
         self.compaction_out_bytes = 0
         self.dict_compares = 0  # cumulative D_i terms across compactions
         self.ingest_bytes = 0   # logical bytes written (rebalance signal)
+        self.n_policy_switches = 0  # set_policy calls (tuner migrations)
         # weakrefs to handed-out snapshots: blob GC must not delete value
         # logs a live snapshot can still address (see _gc_blobs)
         self._snapshots: List["weakref.ref[Snapshot]"] = []
@@ -305,8 +319,58 @@ class LSMTree:
         return self.versions.current.level_bytes(i)
 
     def level_capacity(self, i: int) -> int:
-        # L1 holds T files; each deeper level is T times larger (leveling).
-        return self.cfg.file_bytes * (self.cfg.size_ratio ** i)
+        # L1 holds T files; each deeper level is T times larger.  T comes
+        # from the active policy (the tuner varies it per tree) and
+        # defaults to the config's ratio.
+        return self.cfg.file_bytes * (self.policy.ratio(self.cfg.size_ratio) ** i)
+
+    # ------------------------------------------------------------------ #
+    # compaction policy hooks (docs/DESIGN.md §12)
+    # ------------------------------------------------------------------ #
+    def set_policy(self, policy: CompactionPolicy) -> None:
+        """Swap the compaction policy.  Purely forward-looking: the
+        installed version is untouched; future triggers/merges rewrite
+        the tree toward the new shape (stacked levels drain through
+        full-level merges, leveled layouts start stacking).  Readers are
+        unaffected — every read path is seqno-correct under overlapping
+        runs at any level."""
+        with self._lock:
+            self.policy = policy
+            self.n_policy_switches += 1
+
+    def _mode(self, level: int) -> str:
+        """'L' (single sorted run) or 'T' (stacked runs) for one level."""
+        return self.policy.mode(level, self.cfg.max_levels)
+
+    def _l0_trigger(self) -> int:
+        return self.policy.l0_trigger(self.cfg.l0_limit)
+
+    def _run_depth(self, i: int) -> int:
+        """Max number of overlapping runs a read must consult at level i."""
+        return run_depth(self.versions.current.levels[i])
+
+    def _level_pressure(self, i: int) -> float:
+        """Compaction urgency of level i under the active policy (0 = in
+        shape).  Leveled levels: bytes/capacity overage, plus any excess
+        run depth left behind by a tiered->leveled migration.  Tiered
+        levels: run depth past K-1 (each point = one extra run every
+        read consults), plus a 4x-capacity byte safety valve so a
+        mis-sized K cannot balloon a level unboundedly."""
+        v = self.versions.current
+        if not v.levels[i]:
+            return 0.0
+        over = self.level_bytes(i) / self.level_capacity(i) - 1.0
+        if self._mode(i) == "T":
+            pressure = float(max(0, self._run_depth(i)
+                                 - (self.policy.tier_runs - 1)))
+            if over > 3.0:
+                pressure += over - 3.0
+            return pressure
+        pressure = max(0.0, over)
+        depth = self._run_depth(i)
+        if depth > 1:
+            pressure += float(depth - 1)
+        return pressure
 
     @property
     def dict_bytes(self) -> int:
@@ -424,7 +488,7 @@ class LSMTree:
         self._rotate_memtable()
         while self._flush_oldest_immutable():
             pass
-        if len(self.versions.current.levels[0]) > self.cfg.l0_limit:
+        if len(self.versions.current.levels[0]) > self._l0_trigger():
             # forced write stall: ingestion waits for L0 compaction
             self.write_stalls += 1
             t0 = time.perf_counter()
@@ -503,6 +567,7 @@ class LSMTree:
         if self._sched is not None:
             self._sched.drain([self])
         self._force_compact_inline()
+        self._maybe_retune()
 
     def _force_compact_inline(self) -> None:
         """Fold L0 + cascade inline.  Background callers must drain
@@ -511,41 +576,62 @@ class LSMTree:
             self._compact_l0()
         self._cascade()
 
+    def _maybe_retune(self) -> None:
+        """Between-compaction-rounds tuner hook (sync: end of
+        ``compact``; background: the compaction worker after debt drains
+        to zero)."""
+        if self.tuner is not None:
+            self.tuner.maybe_retune(self)
+
     # ------------------------------------------------------------------ #
-    # compaction scheduling (leveling, paper Figure 2)
+    # compaction scheduling (policy-driven; paper Figure 2 for leveling)
     # ------------------------------------------------------------------ #
-    def _is_bottom(self, out_level: int) -> bool:
+    def _merge_is_bottom(self, inputs: List[SCT], out_level: int) -> bool:
+        """Tombstone-drop safety: the merge may physically delete
+        tombstones only if no run OUTSIDE its inputs can hold an older
+        version of an input key — i.e. every deeper level is empty and
+        every surviving run at ``out_level`` does not overlap the input
+        key span.  Under pure leveling the surviving runs never overlap
+        (the merge consumed all overlaps), so this reduces to the legacy
+        deeper-levels-empty check; with stacked (tiered) levels the
+        surviving overlapping runs force tombstone retention."""
         v = self.versions.current
-        return all(len(v.levels[j]) == 0
-                   for j in range(out_level + 1, self.cfg.max_levels))
+        if any(len(v.levels[j])
+               for j in range(out_level + 1, self.cfg.max_levels)):
+            return False
+        live = [s for s in inputs if s.n]
+        if not live:
+            return True
+        lo = min(s.min_key for s in live)
+        hi = max(s.max_key for s in live)
+        consumed = {s.file_id for s in inputs}
+        return all(s.file_id in consumed or not s.n
+                   or not s.overlaps(lo, hi)
+                   for s in v.levels[out_level])
 
     def _compaction_debt(self) -> float:
         """Debt score driving the background scheduler: L0 run-count
-        overage past ``l0_limit`` (each point = one whole run every read
-        must consult) plus per-level bytes/capacity overage."""
+        overage past the policy's trigger (each point = one whole run
+        every read must consult) plus per-level policy pressure
+        (``_level_pressure``: bytes overage for leveled levels, run
+        depth past K for tiered ones)."""
         v = self.versions.current
-        debt = float(max(0, len(v.levels[0]) - self.cfg.l0_limit))
+        debt = float(max(0, len(v.levels[0]) - self._l0_trigger()))
         for i in range(1, self.cfg.max_levels - 1):
-            if not v.levels[i]:
-                continue
-            over = v.level_bytes(i) / self.level_capacity(i) - 1.0
-            if over > 0.0:
-                debt += over
+            debt += self._level_pressure(i)
         return debt
 
     def _compact_one_step(self) -> bool:
         """One highest-debt merge (background compaction worker).  L0
-        depth always wins (it taxes every read); otherwise the most
-        over-capacity level sheds one victim."""
+        depth always wins (it taxes every read); otherwise the highest-
+        pressure level compacts one step."""
         v = self.versions.current
-        if len(v.levels[0]) > self.cfg.l0_limit:
+        if len(v.levels[0]) > self._l0_trigger():
             self._compact_l0()
             return True
         best, best_over = None, 0.0
         for i in range(1, self.cfg.max_levels - 1):
-            if not v.levels[i]:
-                continue
-            over = v.level_bytes(i) / self.level_capacity(i) - 1.0
+            over = self._level_pressure(i)
             if over > best_over:
                 best, best_over = i, over
         if best is None:
@@ -558,14 +644,24 @@ class LSMTree:
         slowdown band opens at HALF the frozen-queue limit so the writer
         is gently delayed well before the stop cliff — per-rotation
         sleeps concede the GIL to the flush/compaction workers, which is
-        usually enough to never reach a hard stop."""
+        usually enough to never reach a hard stop.
+
+        Thresholds float with the active policy's L0 trigger: a tiered
+        L0 legitimately stacks K runs, so the slowdown/stop gates keep
+        their configured *offsets* above the trigger instead of firing
+        at the leveled absolute counts (identical to the legacy behavior
+        for the leveled policy, where trigger == l0_limit)."""
         if self._sched is None:
             return THROTTLE_NONE
+        l0_trig = self._l0_trigger()
+        stop_at = l0_trig + (self.cfg.l0_stop_trigger - self.cfg.l0_limit)
+        slow_at = l0_trig + (self.cfg.l0_slowdown_trigger
+                             - self.cfg.l0_limit)
         n_l0 = len(self.versions.current.levels[0])
         n_imm = len(self._immutables)
-        if n_l0 >= self.cfg.l0_stop_trigger or n_imm > self.cfg.max_immutables:
+        if n_l0 >= stop_at or n_imm > self.cfg.max_immutables:
             return THROTTLE_STOP
-        if n_l0 >= self.cfg.l0_slowdown_trigger \
+        if n_l0 >= slow_at \
                 or n_imm >= max(1, self.cfg.max_immutables // 2):
             return THROTTLE_SLOWDOWN
         return THROTTLE_NONE
@@ -575,6 +671,12 @@ class LSMTree:
         inputs = list(v.levels[0])
         if not inputs:
             return
+        if self._mode(1) == "T":
+            # tiering: the merged L0 runs become ONE new run stacked on
+            # L1 — nothing at L1 is consumed (that's the write savings)
+            self._run_merge(inputs, out_level=1, drop_in=[(0, inputs)],
+                            stacked=True)
+            return
         lo = min(s.min_key for s in inputs)
         hi = max(s.max_key for s in inputs)
         overlaps = [s for s in v.levels[1] if s.overlaps(lo, hi)]
@@ -582,19 +684,49 @@ class LSMTree:
                         drop_in=[(0, inputs), (1, overlaps)])
 
     def _compact_level_step(self, i: int) -> None:
-        victim = self._pick_victim(i)
-        if victim is None:
+        """One compaction step at level i, shaped by the policy:
+
+        leveled level, single sorted run   round-robin victim file +
+                                           overlaps below (the legacy
+                                           leveling step, bit-identical).
+        tiered level, or a leveled level   whole-level K-way merge into
+        still holding stacked runs from    one output run below — stacked
+        a migration                        if the level below is tiered,
+                                           folded into the sorted run if
+                                           it is leveled.
+        """
+        v = self.versions.current
+        runs = list(v.levels[i])
+        if not runs:
             return
-        overlaps = [s for s in self.versions.current.levels[i + 1]
-                    if s.overlaps(victim.min_key, victim.max_key)]
-        self._run_merge([victim] + overlaps, out_level=i + 1,
-                        drop_in=[(i, [victim]), (i + 1, overlaps)])
+        full_level = self._mode(i) == "T" or run_depth(runs) > 1
+        if not full_level:
+            victim = self._pick_victim(i)
+            if victim is None:
+                return
+            overlaps = [s for s in v.levels[i + 1]
+                        if s.overlaps(victim.min_key, victim.max_key)]
+            self._run_merge([victim] + overlaps, out_level=i + 1,
+                            drop_in=[(i, [victim]), (i + 1, overlaps)])
+            return
+        if self._mode(i + 1) == "T" and i + 1 < self.cfg.max_levels - 1:
+            self._run_merge(runs, out_level=i + 1, drop_in=[(i, runs)],
+                            stacked=True)
+            return
+        lo = min(s.min_key for s in runs if s.n)
+        hi = max(s.max_key for s in runs if s.n)
+        overlaps = [s for s in v.levels[i + 1] if s.overlaps(lo, hi)]
+        self._run_merge(runs + overlaps, out_level=i + 1,
+                        drop_in=[(i, runs), (i + 1, overlaps)])
+
+    def _level_needs_compaction(self, i: int) -> bool:
+        return bool(self.versions.current.levels[i]) \
+            and self._level_pressure(i) > 0.0
 
     def _cascade(self) -> None:
         for i in range(1, self.cfg.max_levels - 1):
             guard = 0
-            while (self.level_bytes(i) > self.level_capacity(i)
-                   and self.versions.current.levels[i]):
+            while self._level_needs_compaction(i):
                 self._compact_level_step(i)
                 guard += 1
                 if guard > 64:
@@ -617,11 +749,15 @@ class LSMTree:
         return runs[cur]
 
     def _run_merge(self, inputs: List[SCT], out_level: int,
-                   drop_in: List[Tuple[int, List[SCT]]]) -> None:
+                   drop_in: List[Tuple[int, List[SCT]]],
+                   stacked: bool = False) -> None:
+        """K-way merge ``inputs`` into ``out_level``.  ``stacked=True``
+        emits the output as one new run prepended (newest-first) at a
+        tiered level instead of folding into the sorted layout."""
         res = merge_scts(
             inputs,
             out_level=out_level,
-            is_bottom=self._is_bottom(out_level),
+            is_bottom=self._merge_is_bottom(inputs, out_level),
             file_entries=self.file_entries,
             store=self.store,
             stats=self.compaction_stats,
@@ -637,6 +773,7 @@ class LSMTree:
         edit = VersionEdit(
             adds=[(out_level, s) for s in res.outputs],
             drops=[(lvl, s.file_id) for lvl, gone in drop_in for s in gone],
+            stacked=[out_level] if stacked else [],
         )
         crashpoint("compact.before_manifest")
         self.versions.apply(edit)
@@ -785,6 +922,13 @@ class LSMTree:
                 if got is not None:
                     return got[1]
             k = np.uint64(key)
+            # tiered levels hold OVERLAPPING runs, so run enumeration
+            # order no longer implies recency: track the max-seqno
+            # visible version across every candidate run instead of
+            # returning the first match (first-match-wins is only sound
+            # for the strictly-newest-first memtable stack above)
+            best_seq = -1
+            best: Optional[Tuple[SCT, int]] = None
             for s in runs:
                 if s.n == 0 or not (s.min_key <= key <= s.max_key):
                     continue
@@ -809,11 +953,17 @@ class LSMTree:
                         cur_blk = pos // epb
                         self.store.stats.add_read(self.cfg.block_bytes, 1)
                     if snap_seq is None or s.seqnos[pos] <= snap_seq:
-                        if s.tombs[pos]:
-                            return None
-                        return self._decode_one(s, pos)
+                        # newest visible version within this run (rows
+                        # are (key asc, seqno desc))
+                        seq = int(s.seqnos[pos])
+                        if seq > best_seq:
+                            best_seq = seq
+                            best = None if s.tombs[pos] else (s, pos)
+                        break
                     pos += 1
-            return None
+            if best is None:
+                return None
+            return self._decode_one(best[0], best[1])
 
     def _decode_one(self, s: SCT, pos: int) -> bytes:
         if s.codec == "opd":
@@ -931,6 +1081,10 @@ class LSMTree:
         return {
             "levels": [len(l) for l in v.levels],
             "level_bytes": [v.level_bytes(i) for i in range(self.cfg.max_levels)],
+            "run_depths": [run_depth(l) for l in v.levels],
+            "policy": self.policy.describe(),
+            "n_policy_switches": self.n_policy_switches,
+            "n_retunes": self.tuner.n_retunes if self.tuner else 0,
             "n_files": self.n_files,
             "disk_bytes": self.disk_bytes,
             "dict_bytes": self.dict_bytes,

@@ -10,10 +10,16 @@ flight:
                      first (L0 recency order depends on it), installing
                      one ``VersionEdit`` per flushed memtable;
   compaction worker  repeatedly runs the single highest-debt merge until
-                     the tree's debt score reaches zero.  Debt =
-                     L0-run-count overage past ``l0_limit`` (weighted —
-                     L0 depth hurts every read) plus per-level
-                     ``bytes/capacity`` overage.
+                     the tree's debt score reaches zero.  Debt is
+                     POLICY-DEFINED (``LSMTree._compaction_debt``):
+                     L0-run-count overage past the active policy's
+                     trigger plus per-level pressure — bytes/capacity
+                     overage for leveled levels, run depth past K for
+                     tiered ones.  When a tree's debt drains to zero the
+                     worker fires the tree's ``PolicyTuner`` hook
+                     (``_maybe_retune``) so online policy migration
+                     happens between compaction rounds, off the writer's
+                     thread.
 
 Jobs never block on other jobs, so any pool size is deadlock-free; the
 pool just sets how many trees make progress at once.
@@ -135,8 +141,16 @@ class MaintenanceScheduler:
             with self._lock:
                 self._compact_inflight.discard(id(tree))
                 self._cond.notify_all()
-            if not failed and tree._compaction_debt() > 0.0:
-                self.schedule_compaction(tree)
+            if not failed:
+                if tree._compaction_debt() > 0.0:
+                    self.schedule_compaction(tree)
+                else:
+                    # round complete: let the tree's PolicyTuner (if
+                    # any) re-fit the workload and migrate the policy
+                    try:
+                        tree._maybe_retune()
+                    except BaseException as e:
+                        self._record_error(e)
 
     def _record_error(self, e: BaseException) -> None:
         with self._lock:

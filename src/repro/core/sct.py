@@ -356,6 +356,19 @@ def build_sct(
             packed = bitpack(np.clip(evs, 0, None), width)
             sct.evs = evs
         sct.blocks.attach_code_zones(field_vals)
+        # per-block SUM weight totals (zone-map closed form for SUM):
+        # weight per entry = numeric(dict[code]), tombstones zeroed —
+        # deferred import; query.spec owns the single SUM definition
+        from repro.query.spec import numeric_values
+
+        wtab = (numeric_values(opd.values).astype(np.int64)
+                if opd.size else np.zeros(0, np.int64))
+        if wtab.shape[0]:
+            entry_w = wtab[field_vals.astype(np.int64)]
+            entry_w[tombs] = 0
+        else:
+            entry_w = np.zeros(n, np.int64)
+        sct.blocks.attach_weight_sums(entry_w)
         meta_overhead = sct.blocks.nbytes
         sct.packed, sct.code_bits, sct.opd = packed, width, opd
         disk = n * (key_bytes + SEQNO_BYTES) + packed.nbytes + opd.nbytes + meta_overhead

@@ -80,18 +80,21 @@ class Version:
                            for s in levels[lvl]]
         for lvl, gone in _group_drops(edit.drops):
             levels[lvl] = [s for s in levels[lvl] if s.file_id not in gone]
-        l0_adds = [s for lvl, s in edit.adds if lvl == 0]
-        if l0_adds:
-            # L0 adds prepend as ``reversed(adds)`` — with the flush path
-            # listing its chunks in build order this reproduces the
-            # legacy ``new[::-1] + levels[0]`` recency layout exactly
-            levels[0] = list(reversed(l0_adds)) + levels[0]
+        stacked = set(edit.stacked) | {0}
+        for i in sorted(stacked):
+            adds_i = [s for lvl, s in edit.adds if lvl == i]
+            if adds_i:
+                # stacked levels (L0 and tiered L1+) prepend as
+                # ``reversed(adds)`` — the first-listed add ends up
+                # newest, reproducing the legacy ``new[::-1] + levels[0]``
+                # recency layout exactly
+                levels[i] = list(reversed(adds_i)) + levels[i]
         for lvl, s in edit.adds:
-            if lvl == 0:
+            if lvl in stacked:
                 continue
             levels[lvl].append(s)
         for i in range(1, len(levels)):
-            if any(lvl == i for lvl, _ in edit.adds):
+            if i not in stacked and any(lvl == i for lvl, _ in edit.adds):
                 levels[i].sort(key=lambda s: s.min_key)
         return Version(tuple(tuple(lvl) for lvl in levels), vid=vid)
 
@@ -117,6 +120,12 @@ class VersionEdit:
     ``last_seqno``  highest seqno this edit makes durable (manifest
                   replay restores the engine's seqno watermark from the
                   running max).
+    ``stacked``   level indices whose adds in THIS edit are a stacked
+                  (tiered) run: prepend newest-first like L0 and skip
+                  the min_key re-sort — the level may now hold
+                  overlapping runs, which the seqno-merged read paths
+                  handle.  Recorded in the manifest so recovery replays
+                  the same recency layout.
     """
 
     adds: List[Tuple[int, SCT]] = dataclasses.field(default_factory=list)
@@ -124,11 +133,14 @@ class VersionEdit:
     replaces: List[Tuple[int, int, SCT]] = dataclasses.field(
         default_factory=list)
     last_seqno: Optional[int] = None
+    stacked: List[int] = dataclasses.field(default_factory=list)
 
     def record(self) -> Dict[str, object]:
         rec: Dict[str, object] = {}
         if self.adds:
             rec["adds"] = [[lvl, s.file_id] for lvl, s in self.adds]
+        if self.stacked:
+            rec["stacked"] = [int(i) for i in self.stacked]
         if self.drops:
             rec["drops"] = [[lvl, fid] for lvl, fid in self.drops]
         if self.replaces:
@@ -198,6 +210,7 @@ class VersionSet:
         # later drop deleted from disk — payloads resolve at the end, for
         # the runs that actually survive the whole log
         fid_levels: List[List[int]] = [[] for _ in range(max_levels)]
+        stacked_ever = {0}  # levels that ever received a stacked add
         last_seqno = 0
         vid = 0
         with open(path, "rb") as f:
@@ -247,11 +260,14 @@ class VersionSet:
                 fid_levels[lvl] = [f for f in fid_levels[lvl]
                                    if f != fid]
             adds = rec.get("adds", ())
-            l0 = [fid for lvl, fid in adds if lvl == 0]
-            if l0:
-                fid_levels[0] = list(reversed(l0)) + fid_levels[0]
+            stacked = set(rec.get("stacked", ())) | {0}
+            stacked_ever |= stacked
+            for i in sorted(stacked):
+                adds_i = [fid for lvl, fid in adds if lvl == i]
+                if adds_i:
+                    fid_levels[i] = list(reversed(adds_i)) + fid_levels[i]
             for lvl, fid in adds:
-                if lvl != 0:
+                if lvl not in stacked:
                     fid_levels[lvl].append(fid)
         if torn:
             with open(path, "r+b") as f:
@@ -259,9 +275,13 @@ class VersionSet:
         levels: List[List[SCT]] = [
             [store.payload(fid) for fid in lvl] for lvl in fid_levels]
         for i in range(1, max_levels):
-            # append order during replay is arbitrary; L1+ runs are
-            # non-overlapping so a final min_key sort restores the layout
-            levels[i].sort(key=lambda s: s.min_key)
+            # append order during replay is arbitrary; non-stacked L1+
+            # runs are non-overlapping so a final min_key sort restores
+            # the layout.  Levels that ever held a stacked (tiered) run
+            # keep replay order: their recency layout IS the layout, and
+            # the seqno-merged read paths don't depend on it anyway.
+            if i not in stacked_ever:
+                levels[i].sort(key=lambda s: s.min_key)
         vs.current = Version(tuple(tuple(lvl) for lvl in levels), vid=vid)
         vs.last_seqno = last_seqno
         return vs

@@ -61,9 +61,12 @@ except Exception:  # pragma: no cover - pallas builds without the TPU ext
 
 DEFAULT_BLOCK_ROWS = 8
 LANES = 128
-AGG_META_COLS = 6   # (zone_lo, zone_hi, range_base, n_valid, weight_base, 0)
+# (zone_lo, zone_hi, range_base, n_valid, weight_base, tile_weight_sum)
+AGG_META_COLS = 6
 EMPTY_ZONE = (0xFFFFFFFF, 0)
 MIN_SENTINEL = 0xFFFFFFFF   # per-tile min when no entry matched
+WSUM_COL = 5                # meta column: exact tile weight total
+WSUM_SENTINEL = 0xFFFFFFFF  # unknown/overflowing total: no SUM closed form
 MAX_BINS = 64       # histogram kernel cap (static unroll is O(bins * per))
 
 # tile flag values (per-tile provenance for StageStats)
@@ -92,6 +95,7 @@ def _make_agg_kernel(width: int, n_preds: int, with_sum: bool,
         base = meta_ref[0, 2]
         n_valid = meta_ref[0, 3].astype(jnp.int32)
         w_base = meta_ref[0, 4].astype(jnp.int32)
+        wsum = meta_ref[0, WSUM_COL]
 
         any_hit = jnp.zeros((), jnp.bool_)
         # closed form needs z_lo >= 1 (tombstones pack as 0 and would be
@@ -109,16 +113,19 @@ def _make_agg_kernel(width: int, n_preds: int, with_sum: bool,
             all_closed = jnp.logical_and(
                 all_closed, jnp.logical_or(jnp.logical_not(inter), contained))
         if with_sum:
-            # SUM has no closed form from (count, zone) alone — it would
-            # need per-block weight sums in the zone map (future work).
-            all_closed = jnp.zeros((), jnp.bool_)
+            # SUM's closed form is the tile's exact weight total (meta
+            # col WSUM_COL, from the per-block zone-map weight sums);
+            # the sentinel marks tiles whose total is unknown.
+            all_closed = jnp.logical_and(
+                all_closed, wsum != jnp.uint32(WSUM_SENTINEL))
         shortcut = jnp.logical_and(any_hit, all_closed)
 
         @pl.when(shortcut)
         def _closed_form():
             # every real entry of the tile matches each intersecting
             # range; z_lo / z_hi are attained within this run (see
-            # module docstring), so they are valid min/max partials.
+            # module docstring), so they are valid min/max partials —
+            # and the tile weight total IS the SUM contribution.
             for k in range(n_preds):
                 lo = ranges_ref[base + k, 0]
                 hi = ranges_ref[base + k, 1]
@@ -128,7 +135,11 @@ def _make_agg_kernel(width: int, n_preds: int, with_sum: bool,
                 min_ref[0, k] = jnp.where(inter, z_lo,
                                           jnp.uint32(MIN_SENTINEL))
                 max_ref[0, k] = jnp.where(inter, z_hi, jnp.uint32(0))
-                sum_ref[0, k] = jnp.int32(0)
+                if with_sum:
+                    sum_ref[0, k] = jnp.where(inter, wsum.astype(jnp.int32),
+                                              jnp.int32(0))
+                else:
+                    sum_ref[0, k] = jnp.int32(0)
 
         @pl.when(jnp.logical_and(any_hit, jnp.logical_not(shortcut)))
         def _evaluate():

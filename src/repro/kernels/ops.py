@@ -236,6 +236,10 @@ def _level_tiles(packed_list, n_list, zones_list, width: int,
         seg_words.append(m)
         seg_tiles.append(n_tiles)
         meta = np.zeros((n_tiles, meta_cols), np.uint32)
+        if meta_cols > _agg.WSUM_COL:
+            # no weight sum known (yet): sentinel blocks the SUM closed
+            # form; fused_level_agg overwrites with exact per-tile sums
+            meta[:, _agg.WSUM_COL] = _agg.WSUM_SENTINEL
         for t in range(n_tiles):
             e0 = t * tile_entries
             e1 = min(int(n), (t + 1) * tile_entries)
@@ -247,13 +251,59 @@ def _level_tiles(packed_list, n_list, zones_list, width: int,
                 # the closed-form path, so tombstones stay safe)
                 meta[t, 0], meta[t, 1] = 0, 0xFFFFFFFF
             else:
-                code_lo, code_hi, epb = zones
+                code_lo, code_hi, epb = zones[0], zones[1], zones[2]
                 b0, b1 = e0 // epb, (e1 - 1) // epb
                 meta[t, 0] = code_lo[b0:b1 + 1].min()
                 meta[t, 1] = code_hi[b0:b1 + 1].max()
         metas.append(meta)
     words_all = np.concatenate(chunks).reshape(-1, LANES)
     return words_all, metas, seg_words, seg_tiles
+
+
+def _tile_weight_sums(meta, packed, n, zones, wtab, width: int,
+                      block_rows: int) -> None:
+    """Fill ``meta[:, WSUM_COL]`` with the EXACT weight total of each
+    tile's entries: cumulative 4 KB-block sums plus edge-block
+    corrections gathered from the packed words (tile boundaries rarely
+    align with block boundaries).  Tiles keep the sentinel — blocking
+    the SUM closed form — when the SCT carries no block weight sums, or
+    when a total would not fit the kernel's int32 accumulator.
+
+    Edge-block corrections read tombstones as code 0 and charge
+    ``wtab[0]``; that is only inconsistent with the (tombstone-zeroed)
+    block sums for blocks whose zone starts at 0 — exactly the blocks
+    that force ``z_lo = 0`` on every tile covering them, so the kernel
+    never uses those tiles' totals."""
+    ws = zones[3] if zones is not None and len(zones) > 3 else None
+    wtab = np.asarray(wtab, np.int64).reshape(-1)
+    if ws is None or wtab.shape[0] == 0:
+        return
+    per = 32 // width
+    tile_entries = block_rows * LANES * per
+    epb = zones[2]
+    words = np.asarray(packed, np.uint32).reshape(-1)
+    cum = np.concatenate([[0], np.cumsum(np.asarray(ws, np.int64))])
+    fmask = np.uint32((1 << width) - 1)
+
+    def prefix(e: int) -> int:  # weight total of entries [0, e)
+        b = e // epb
+        a = b * epb
+        part = 0
+        if a < e:
+            w0 = a // per
+            seg = words[w0: (e - 1) // per + 1]
+            fields = np.zeros(seg.shape[0] * per, np.int64)
+            for f in range(per):
+                fields[f::per] = (seg >> np.uint32(f * width)) & fmask
+            part = int(wtab[fields[a - w0 * per: e - w0 * per]].sum())
+        return int(cum[b]) + part
+
+    pref = [prefix(min(int(n), t * tile_entries))
+            for t in range(meta.shape[0] + 1)]
+    for t in range(meta.shape[0]):
+        v = pref[t + 1] - pref[t]
+        if 0 <= v < 2**31:
+            meta[t, _agg.WSUM_COL] = np.uint32(v)
 
 
 def _tile_info(flags: np.ndarray) -> dict:
@@ -297,6 +347,8 @@ def fused_level_agg(
             wts = np.asarray(wts, np.int32).reshape(-1)
             tabs.append(wts)
             w_off += wts.shape[0]
+            _tile_weight_sums(meta, packed_list[s_idx], n_list[s_idx],
+                              zones_list[s_idx], wts, width, block_rows)
         flat = np.concatenate(tabs) if tabs else np.zeros(0, np.int32)
         pad = -(-max(1, flat.shape[0]) // LANES) * LANES
         weights = np.zeros(pad, np.int32)

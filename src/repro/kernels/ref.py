@@ -181,6 +181,7 @@ def fused_zone_agg(words, meta, ranges, weights, width: int, n_preds: int,
     for i in range(n_tiles):  # python loop: oracle clarity over speed
         z_lo, z_hi = meta[i, 0], meta[i, 1]
         base, n_valid, w_base = int(meta[i, 2]), int(meta[i, 3]), int(meta[i, 4])
+        wsum = int(meta[i, 5])
         inter = np.zeros(n_preds, bool)
         contained = np.zeros(n_preds, bool)
         for k in range(n_preds):
@@ -188,7 +189,10 @@ def fused_zone_agg(words, meta, ranges, weights, width: int, n_preds: int,
             inter[k] = lo <= hi and lo <= z_hi and hi >= z_lo
             contained[k] = inter[k] and lo <= z_lo and z_hi <= hi
         any_hit = inter.any()
-        shortcut = (any_hit and not with_sum and z_lo >= 1
+        # SUM joins the closed form when the tile's exact weight total
+        # is present in the meta row (sentinel 0xFFFFFFFF = unknown)
+        shortcut = (any_hit and z_lo >= 1
+                    and (not with_sum or wsum != 0xFFFFFFFF)
                     and all(contained[k] or not inter[k]
                             for k in range(n_preds)))
         if shortcut:
@@ -197,6 +201,8 @@ def fused_zone_agg(words, meta, ranges, weights, width: int, n_preds: int,
                     cnts[i, k] = n_valid
                     mins[i, k] = np.uint32(z_lo)
                     maxs[i, k] = np.uint32(z_hi)
+                    if with_sum:
+                        sums[i, k] = np.int32(wsum)
             flags[i, 0] = 2
             continue
         if not any_hit:

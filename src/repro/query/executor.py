@@ -163,9 +163,15 @@ def _fastpath_aggregate(live_runs, specs, stats, backend, block_rows):
 
 
 def _zones_of(s: SCT):
+    """(code_lo, code_hi, entries_per_block, weight_sums) — the last
+    entry is the per-block SUM weight total (None on SCTs built before
+    it existed); tile builders index positionally so 3-tuples from older
+    callers/tests keep working."""
     b = s.blocks
-    return ((b.code_lo, b.code_hi, b.entries_per_block)
-            if b is not None and b.has_zones else None)
+    if b is None or not b.has_zones:
+        return None
+    return (b.code_lo, b.code_hi, b.entries_per_block,
+            getattr(b, "weight_sums", None))
 
 
 def _decode_one(s: SCT, code: int, stats) -> bytes:
@@ -255,7 +261,8 @@ def _host_scalars(s, windows, specs, scalar_q, partials, stats):
             _host_tally(s, evs, m, k, counts, sums, min_codes, max_codes,
                         need_sum)
             continue
-        code_lo, code_hi, epb = zones
+        code_lo, code_hi, epb = zones[0], zones[1], zones[2]
+        wsums = zones[3] if len(zones) > 3 else None
         nb = code_lo.shape[0]
         ends = np.minimum((np.arange(nb) + 1) * epb, s.n)
         starts = np.arange(nb) * epb
@@ -263,8 +270,9 @@ def _host_scalars(s, windows, specs, scalar_q, partials, stats):
             (code_hi.astype(np.int64) >= lo_i)
         closed = inter & (lo_i <= code_lo.astype(np.int64)) & \
             (code_hi.astype(np.int64) <= hi_i) & (code_lo >= 1)
-        if need_sum:
-            closed = np.zeros(nb, bool)  # SUM has no zone closed form
+        if need_sum and wsums is None:
+            # SUM's closed form needs the per-block weight totals
+            closed = np.zeros(nb, bool)
         evaluate = inter & ~closed
         stats.counts["agg_tiles_total"] += nb
         stats.counts["agg_tiles_skipped"] += int((~inter).sum())
@@ -274,6 +282,11 @@ def _host_scalars(s, windows, specs, scalar_q, partials, stats):
             counts[k] += int((ends[closed] - starts[closed]).sum())
             min_codes[k] = int(code_lo[closed].min())
             max_codes[k] = int(code_hi[closed].max())
+            if need_sum:
+                # containment makes every live entry a match, and
+                # code_lo >= 1 rules out tombstones — the block weight
+                # total IS the blocks' exact SUM contribution
+                sums[k] += int(wsums[closed].sum())
         if evaluate.any():
             evs = s.evs if evs is None else evs
             m = np.zeros(s.n, bool)

@@ -319,7 +319,26 @@ class ShardedLSM:
             return
         self.flush()
         self.scheduler.drain(self.shards)
-        self.executor.map(lambda t: t._force_compact_inline(), self.shards)
+
+        def fold(t):
+            t._force_compact_inline()
+            t._maybe_retune()  # per-shard tuner hook, round complete
+        self.executor.map(fold, self.shards)
+
+    # ------------------------------------------------------------------ #
+    # per-shard compaction policy (docs/DESIGN.md §12)
+    # ------------------------------------------------------------------ #
+    def set_policy(self, shard: int, policy) -> None:
+        """Install a ``CompactionPolicy`` on ONE shard — the whole point
+        of per-shard policy: a write-heavy shard can run tiering while
+        its scan-heavy sibling stays leveled.  With
+        ``cfg.policy_autotune`` each shard tree carries its own
+        ``PolicyTuner`` and migrates itself; this is the manual
+        override."""
+        self.shards[shard].set_policy(policy)
+
+    def policies(self) -> List[str]:
+        return [t.policy.describe() for t in self.shards]
 
     # ------------------------------------------------------------------ #
     # rebalancing (hot-shard splits)
@@ -357,6 +376,10 @@ class ShardedLSM:
                 self._splitter.defer(old)  # unsplittable: back off
                 continue
             pivot, left, right = got
+            # split halves inherit the retired shard's (possibly tuned)
+            # policy — a split must not silently reset a migration
+            left.policy = old.policy
+            right.policy = old.policy
             old_runs = old.all_runs()
             self.router.split(i, pivot)
             self.shards[i:i + 1] = [left, right]
@@ -536,6 +559,11 @@ class ShardedLSM:
             "n_files": self.n_files,
             "disk_bytes": self.disk_bytes,
             "dict_bytes": self.dict_bytes,
+            "policies": self.policies(),
+            "n_policy_switches": sum(t.n_policy_switches
+                                     for t in self.shards),
+            "n_retunes": sum(t.tuner.n_retunes for t in self.shards
+                             if t.tuner is not None),
             **agg,
             "per_shard": [t.shape_report() for t in self.shards],
         }

@@ -378,6 +378,35 @@ def test_fastpath_engages_with_shortcircuit():
         assert got[0].value == n
 
 
+@pytest.mark.parametrize("backend", ["fused", "numpy"])
+def test_sum_shortcircuit_via_weight_sums(backend):
+    """SUM rides the closed-form tile short-circuit: per-block weight
+    sums in the zone map let contained tiles/blocks contribute their
+    exact weight total without reading a code word.  Before the weight
+    sums existed, any SUM spec forced full evaluation of every
+    intersecting tile — this pins the telemetry floor on both the
+    kernel path ('fused') and the host block-granular path ('numpy')."""
+    n = 6000
+    keys = np.arange(1, n + 1).astype(np.uint64)
+    # key-correlated numeric values -> tight zones, nonzero weights
+    vals = np.array([b"%012d_v" % (1000 + i // 4) for i in range(n)],
+                    f"S{VW}")
+    cfg = LSMConfig(codec="opd", value_width=VW, filter_backend=backend)
+    specs = [AggSpec("sum"),
+             AggSpec("sum", pred=Predicate("prefix", b"000000001"))]
+    with LSMTree(cfg) as tree:
+        tree.put_batch(keys, vals)
+        tree.flush()
+        tree.compact()
+        got = tree.aggregate_many(specs)
+        c = tree.agg_stats.counts
+        assert c.get("agg_fastpath_runs", 0) > 0
+        assert c.get("agg_fallback_runs", 0) == 0
+        assert c.get("agg_tiles_shortcircuit", 0) > 0
+        _check_engine(tree, specs, tag=f"sum-sc-{backend}")
+        assert got[0].value == int(numeric_values(vals).sum())
+
+
 def test_general_path_with_visible_memtable():
     """Any visible memtable row forces the general path (its tombstones
     shadow run rows) — and the answers still match the oracle."""

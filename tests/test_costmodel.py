@@ -105,3 +105,83 @@ def test_aggregate_model_matches_bench_htap():
     # the competitor gains nothing from the aggregate path vs decoding
     assert by_name["htap/rocks_plain"]["agg_speedup"] < \
         by_name["htap/lsm_opd"]["agg_speedup"]
+
+
+# --------------------------------------------------------------------------- #
+# per-policy closed forms (Sarkar et al. design space; docs/DESIGN.md §12)
+# --------------------------------------------------------------------------- #
+def test_policy_write_amp_ordering():
+    """Tiering rewrites each byte ~once per level, leveling ~T times per
+    level; lazy-leveling sits strictly between for T > 1, L > 1."""
+    from repro.core.costmodel import policy_write_amp
+
+    T, K, L = 8, 4, 4
+    tier = policy_write_amp("tiered", T, K, L)
+    lazy = policy_write_amp("lazy_leveled", T, K, L)
+    lvl = policy_write_amp("leveled", T, K, L)
+    assert tier < lazy < lvl
+    assert tier == L and lvl == T * L and lazy == (L - 1) + T
+    # a hybrid all-'L' vector reduces to leveling, all-'T' to tiering
+    assert policy_write_amp("hybrid", T, K, L, ("L",) * L) == lvl
+    assert policy_write_amp("hybrid", T, K, L, ("T",) * L) == tier
+
+
+def test_policy_read_runs_ordering():
+    """Scan cost mirrors write amp in reverse: leveling reads the fewest
+    runs, tiering K per level, lazy-leveling in between."""
+    from repro.core.costmodel import policy_read_runs
+
+    T, K, L = 8, 4, 4
+    lvl = policy_read_runs("leveled", T, K, L)
+    lazy = policy_read_runs("lazy_leveled", T, K, L)
+    tier = policy_read_runs("tiered", T, K, L)
+    assert lvl < lazy < tier
+    assert lvl == L and tier == K * L and lazy == K * (L - 1) + 1
+
+
+def test_policy_cost_direction_matches_workload():
+    """The tuner's objective must rank tiering first on a write-only
+    workload and leveling first on a scan-only workload — the direction
+    bench_policy measures."""
+    from repro.core.costmodel import CostParams, policy_cost
+
+    p = CostParams()
+    kinds = ("leveled", "tiered", "lazy_leveled")
+
+    def best(w_write, w_scan):
+        return min(kinds, key=lambda k: policy_cost(
+            p, k, T=8, K=4, w_write=w_write, w_scan=w_scan))
+
+    assert best(1.0, 0.0) == "tiered"
+    assert best(0.0, 1.0) == "leveled"
+
+
+def test_policy_compaction_io_grows_with_T_under_leveling_only():
+    """Leveled compaction IO grows with the size ratio (each level is
+    rewritten ~T times); tiered IO shrinks with T (fewer levels, one
+    rewrite each) — Sarkar et al.'s central tradeoff."""
+    from repro.core.costmodel import CostParams, policy_compaction_io
+
+    p = CostParams()
+    lv4 = policy_compaction_io(p, "leveled", T=4)
+    lv16 = policy_compaction_io(p, "leveled", T=16)
+    ti4 = policy_compaction_io(p, "tiered", T=4)
+    ti16 = policy_compaction_io(p, "tiered", T=16)
+    assert lv16 > lv4
+    assert ti16 <= ti4
+    assert ti4 < lv4 and ti16 < lv16
+
+
+def test_policy_scan_io_zone_skip_and_runs():
+    """Zone short-circuits cut the code-column term for every policy;
+    the per-run overhead term keeps tiering strictly above leveling at
+    equal zone_skip."""
+    from repro.core.costmodel import CostParams, policy_scan_io
+
+    p = CostParams()
+    for skip in (0.0, 0.5):
+        lvl = policy_scan_io(p, "leveled", T=8, K=4, zone_skip=skip)
+        tier = policy_scan_io(p, "tiered", T=8, K=4, zone_skip=skip)
+        assert lvl < tier
+    assert policy_scan_io(p, "leveled", T=8, K=4, zone_skip=0.9) \
+        < policy_scan_io(p, "leveled", T=8, K=4, zone_skip=0.0)

@@ -1,0 +1,397 @@
+"""Compaction-policy differential contract (docs/DESIGN.md §12).
+
+The policy axis (leveled / tiered / lazy_leveled / hybrid) changes the
+tree's *shape* — how many overlapping runs a level may hold and what a
+compaction step merges — but must never change what a reader sees.
+Four layers of checks:
+
+* bit-identity: every policy x codec x shard count x maintenance mode
+  produces byte-identical filter / range / aggregate results to the
+  leveled baseline on a seeded put/delete workload (fast tier-1 subset;
+  the full 4x4x2x2 cross runs with ``POLICY_MATRIX=full``, wired into
+  the nightly CI job);
+* shape: a tiered tree actually stacks runs (run_depth > 1) where the
+  same data under leveling keeps every level at depth 1, and the
+  writer-throttle gates float with the policy's L0 trigger instead of
+  firing at leveled absolute counts;
+* migration: ``set_policy`` mid-stream is incremental — a snapshot
+  pinned before the switch still reads the pre-switch state after the
+  tree reshapes, and a WAL crash *during* a migration merge recovers to
+  an acknowledged prefix exactly like any other crash (the stacked
+  manifest edits replay);
+* tuning: ``PolicyTuner`` moves toward tiering on write-only windows
+  and back to leveling on scan-only windows, with its decisions
+  surfaced in ``shape_report``.
+"""
+
+import dataclasses
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import LSMConfig, LSMTree, Predicate
+from repro.core.maintenance import THROTTLE_NONE, MaintenanceError
+from repro.core.policy import (CompactionPolicy, PolicyTuner, make_policy,
+                               run_depth)
+from repro.query import AggSpec
+from repro.shard import ShardedLSM
+from repro.testing.crashpoints import CRASH, SimulatedCrash
+from repro.testing.workload import apply_op, gen_ops, mutations, value_for
+
+VW = 24
+KEY_SPACE = 900
+PRED = Predicate("prefix", b"pfx_0")
+CODECS = ["opd", "plain", "heavy", "blob"]
+POLICIES = {
+    "leveled": dict(compaction_policy="leveled"),
+    "tiered": dict(compaction_policy="tiered", tier_runs=3),
+    "lazy_leveled": dict(compaction_policy="lazy_leveled", tier_runs=3),
+    "hybrid": dict(compaction_policy="hybrid",
+                   level_modes=("L", "T", "T", "L", "L")),
+}
+FULL_MATRIX = os.environ.get("POLICY_MATRIX", "") == "full"
+
+OPS = gen_ops(11, 1200, KEY_SPACE)
+
+SPECS = [AggSpec("count"), AggSpec("sum"), AggSpec("min"), AggSpec("max"),
+         AggSpec("sum", pred=PRED)]
+
+
+def _cfg(codec="opd", mode="sync", **kw):
+    base = dict(codec=codec, value_width=VW, memtable_bytes=8 * 1024,
+                file_bytes=16 * 1024, l0_limit=2, size_ratio=3,
+                max_levels=5, blob_gc_threshold=0.3, maintenance=mode)
+    base.update(kw)
+    return LSMConfig(**base)
+
+
+def _fingerprint(eng):
+    """Everything a reader can observe, as plain python values."""
+    eng.drain()
+    fr = eng.filter(PRED)
+    ka, va = eng.range_lookup(0, KEY_SPACE)
+    aggs = [(r.op, r.count, r.total, r.min_value, r.max_value)
+            for r in eng.aggregate_many(SPECS)]
+    return (fr.keys.tolist(), fr.values.tolist(),
+            ka.tolist(), va.tolist(), aggs)
+
+
+def _run_cell(codec, mode, n_shards, **pol):
+    cfg = _cfg(codec, mode, **pol)
+    if n_shards == 1:
+        eng = LSMTree(cfg)
+    else:
+        eng = ShardedLSM(cfg, n_shards=n_shards, key_max=KEY_SPACE,
+                         n_workers=2)
+    with eng:
+        for op in OPS:
+            apply_op(eng, op)
+        eng.flush()
+        return _fingerprint(eng)
+
+
+_BASE = {}
+
+
+def _baseline(codec):
+    """Leveled / sync / single-tree: the seed engine's exact behavior."""
+    if codec not in _BASE:
+        _BASE[codec] = _run_cell(codec, "sync", 1)
+    return _BASE[codec]
+
+
+def _cells():
+    """Tier-1 subset: every policy x every codec (sync, 1 shard) plus
+    every policy x shards{1,4} x modes{sync,background} on opd.  The
+    remaining cells complete the full cross under POLICY_MATRIX=full."""
+    out = []
+    for kind in POLICIES:
+        for codec in CODECS:
+            for n_shards in (1, 4):
+                for mode in ("sync", "background"):
+                    fast = (n_shards, mode) == (1, "sync") or codec == "opd"
+                    out.append(pytest.param(
+                        kind, codec, n_shards, mode,
+                        marks=[] if fast else pytest.mark.skipif(
+                            not FULL_MATRIX,
+                            reason="full policy matrix: set "
+                            "POLICY_MATRIX=full (nightly CI job)")))
+    return out
+
+
+@pytest.mark.parametrize("kind,codec,n_shards,mode", _cells())
+def test_policy_bit_identity(kind, codec, n_shards, mode):
+    got = _run_cell(codec, mode, n_shards, **POLICIES[kind])
+    assert got == _baseline(codec), \
+        f"{kind} diverged from leveled on {codec}/{n_shards}sh/{mode}"
+
+
+# --------------------------------------------------------------------------- #
+# shape: tiering actually stacks runs; leveling never does
+# --------------------------------------------------------------------------- #
+def _shuffled_ingest(tree, n=3000, batch=250, seed=5):
+    rng = np.random.default_rng(seed)
+    keys = rng.permutation(n).astype(np.uint64)
+    vals = np.array([value_for(i, VW) for i in range(n)], f"S{VW}")
+    peak = 0
+    for lo in range(0, n, batch):
+        tree.put_batch(keys[lo:lo + batch], vals[lo:lo + batch])
+        tree.flush()
+        depths = tree.shape_report()["run_depths"]
+        peak = max(peak, max(depths[1:], default=0))
+    return peak
+
+
+def test_tiered_levels_stack_runs_leveled_never():
+    with LSMTree(_cfg(compaction_policy="tiered", tier_runs=4)) as t:
+        peak = _shuffled_ingest(t)
+        assert peak > 1, "tiered tree never stacked a run"
+        assert peak <= 4, f"tiered depth {peak} exceeded K"
+        rep = t.shape_report()
+        assert rep["policy"] == "tiered,K=4"
+        t.compact()
+        assert max(t.shape_report()["run_depths"][1:]) <= 3  # K-1 post-merge
+    with LSMTree(_cfg()) as t:
+        peak = _shuffled_ingest(t)
+        assert peak <= 1, f"leveled tree reached run depth {peak}"
+
+
+def test_lazy_leveled_bottom_stays_single_run():
+    cfg = _cfg(compaction_policy="lazy_leveled", tier_runs=3)
+    with LSMTree(cfg) as t:
+        _shuffled_ingest(t, n=4000)
+        t.compact()
+        depths = t.shape_report()["run_depths"]
+        # leveling at the two deepest levels: never more than one run
+        assert all(d <= 1 for d in depths[cfg.max_levels - 2:])
+
+
+def test_throttle_gates_float_with_tiered_trigger():
+    """Regression (S2): a tiered L0 legitimately holds K-1 runs; the
+    slowdown/stop gates must keep their configured *offsets* above the
+    policy trigger, not fire at the leveled absolute counts."""
+    cfg = _cfg(mode="background", compaction_policy="tiered", tier_runs=8)
+    with LSMTree(cfg) as t:
+        # stage 6 L0 runs: below the tiered trigger (7), so background
+        # maintenance correctly leaves them alone
+        for i in range(6):
+            keys = np.arange(i * 50, i * 50 + 50).astype(np.uint64)
+            vals = np.array([value_for(i * 50 + j, VW) for j in range(50)],
+                            f"S{VW}")
+            t.put_batch(keys, vals)
+            t.flush()
+            t.drain()
+        n_l0 = len(t.versions.current.levels[0])
+        assert n_l0 >= 6
+        # the legacy leveled-absolute gate would be throttling here ...
+        assert n_l0 >= cfg.l0_slowdown_trigger
+        # ... the policy-relative gate is not
+        assert t._throttle_level() == THROTTLE_NONE
+        assert t.write_slowdowns == 0 and t.write_stalls == 0
+
+
+# --------------------------------------------------------------------------- #
+# migration: set_policy is incremental and snapshot-safe
+# --------------------------------------------------------------------------- #
+def test_snapshot_pinned_across_policy_migration():
+    with LSMTree(_cfg()) as t:
+        for op in OPS:
+            apply_op(t, op)
+        t.flush()
+        snap = t.snapshot()
+        want_f = t.filter(PRED, snapshot=snap)
+        want_k, want_v = t.range_lookup(0, KEY_SPACE, snapshot=snap)
+
+        # leveled -> tiered: new writes land in stacked runs
+        t.set_policy(CompactionPolicy(kind="tiered", tier_runs=3))
+        for op in gen_ops(13, 300, KEY_SPACE):
+            apply_op(t, op)
+        t.flush()
+        t.compact()
+        # tiered -> leveled: the next merges fold the stacks back down
+        t.set_policy(CompactionPolicy(kind="leveled"))
+        t.compact()
+        assert t.shape_report()["n_policy_switches"] == 2
+
+        got_f = t.filter(PRED, snapshot=snap)
+        assert got_f.keys.tolist() == want_f.keys.tolist()
+        assert got_f.values.tolist() == want_f.values.tolist()
+        got_k, got_v = t.range_lookup(0, KEY_SPACE, snapshot=snap)
+        assert got_k.tolist() == want_k.tolist()
+        assert got_v.tolist() == want_v.tolist()
+
+
+def test_sharded_per_shard_policies_bit_identical():
+    """Heterogeneous per-shard policies (the tuner's end state) read
+    identically to a uniform leveled engine."""
+    cfg = _cfg()
+    with ShardedLSM(cfg, n_shards=4, key_max=KEY_SPACE, n_workers=2) as eng:
+        eng.set_policy(1, CompactionPolicy(kind="tiered", tier_runs=3))
+        eng.set_policy(2, CompactionPolicy(kind="lazy_leveled", tier_runs=3))
+        for op in OPS:
+            apply_op(eng, op)
+        eng.flush()
+        eng.compact_all()
+        assert eng.policies() == [
+            "leveled", "tiered,K=3", "lazy_leveled,K=3", "leveled"]
+        assert _fingerprint(eng) == _baseline("opd")
+
+
+# --------------------------------------------------------------------------- #
+# WAL crash-recovery during a migration merge
+# --------------------------------------------------------------------------- #
+MIGRATION_CRASH_POINTS = [
+    "compact.mid_spill", "compact.before_manifest", "compact.after_manifest"]
+
+
+def _check_recovered(back, cfg, ops, floor):
+    """Recovered state == acknowledged prefix (test_wal_recovery's
+    differential, against a fresh leveled sync/no-WAL reference)."""
+    muts = mutations(ops)
+    K = back._seqno
+    assert floor <= K <= len(muts), \
+        f"recovered seqno {K} outside [{floor}, {len(muts)}]"
+    ref = LSMTree(dataclasses.replace(cfg, maintenance="sync",
+                                      wal_sync="off"))
+    for op in muts[:K]:
+        apply_op(ref, op)
+    ref.flush()
+    a, b = back.filter(PRED), ref.filter(PRED)
+    assert a.keys.tolist() == b.keys.tolist()
+    assert a.values.tolist() == b.values.tolist()
+    ka, va = back.range_lookup(0, KEY_SPACE)
+    kb, vb = ref.range_lookup(0, KEY_SPACE)
+    assert ka.tolist() == kb.tolist()
+    assert va.tolist() == vb.tolist()
+    ref.close()
+
+
+@pytest.mark.parametrize("point", MIGRATION_CRASH_POINTS)
+def test_crash_during_policy_migration(tmp_path, point):
+    """Crash inside a *migration* merge (tiered policy freshly installed
+    on a leveled tree): the stacked manifest edits and spills hit the
+    same crash sites as any compaction, and recovery must yield an
+    acknowledged prefix.  The recovered tree then finishes the migration
+    and still reads identically."""
+    cfg = _cfg(wal_sync="every")
+    spill = str(tmp_path)
+    tree = LSMTree(cfg, spill_dir=spill)
+    ops = gen_ops(29, 350, KEY_SPACE)
+    for op in ops:
+        apply_op(tree, op)
+
+    tree.set_policy(CompactionPolicy(kind="tiered", tier_runs=3))
+    tail = gen_ops(31, 150, KEY_SPACE) + [("flush",), ("compact",)]
+    fired = False
+    with CRASH.armed(point):
+        try:
+            for op in tail:
+                apply_op(tree, op)
+        except SimulatedCrash:
+            fired = True
+        except MaintenanceError as e:
+            assert isinstance(e.__cause__, SimulatedCrash), e
+            fired = True
+        fired = fired or CRASH.fired is not None
+        floor = tree.wal.durable_seqno
+        tree.wal.simulate_power_loss()
+    if not fired:  # pragma: no cover - tiny merges may spill one chunk
+        pytest.skip(f"{point} not reached by the migration merge")
+
+    back = LSMTree.restore(cfg, spill)
+    _check_recovered(back, cfg, ops + tail, floor)
+    # recovery keeps the policy axis live: finish the migration (pure
+    # reshaping — reads must not move), then keep accepting writes
+    back.set_policy(CompactionPolicy(kind="tiered", tier_runs=3))
+    back.flush()
+    back.compact()
+    _check_recovered(back, cfg, ops + tail, floor)
+    back.put(0, value_for(0))
+    assert back.get(0) == value_for(0)
+    back.close()
+
+
+# --------------------------------------------------------------------------- #
+# online tuning
+# --------------------------------------------------------------------------- #
+def test_tuner_write_heavy_then_scan_heavy_round_trip():
+    """Write-only window -> the tuner leaves leveling (tiering's write
+    amp is ~T x lower); scan-only window -> it returns (leveling reads
+    the fewest runs).  Decisions surface in shape_report."""
+    cfg = _cfg(policy_autotune=True)
+    with LSMTree(cfg) as t:
+        rng = np.random.default_rng(7)
+        for lo in range(0, 6000, 500):
+            keys = rng.integers(0, KEY_SPACE, 500).astype(np.uint64)
+            vals = np.array([value_for(lo + j, VW) for j in range(500)],
+                            f"S{VW}")
+            t.put_batch(keys, vals)
+        t.flush()
+        t.compact()  # retune hook: window was pure ingest
+        assert t.tuner.n_retunes >= 1
+        assert t.policy.kind in ("tiered", "lazy_leveled"), \
+            t.tuner.history[-1]
+        assert t.shape_report()["n_policy_switches"] >= 1
+
+        for _ in range(100):
+            t.filter(PRED)
+        t.compact()  # retune hook: window was pure scans
+        assert t.policy.kind == "leveled", t.tuner.history[-1]
+        assert t.shape_report()["n_retunes"] == t.tuner.n_retunes
+
+
+def test_tuner_hysteresis_holds_on_mixed_window():
+    """Near-tied windows must not thrash: with a huge hysteresis margin
+    the tuner records decisions but never switches."""
+    cfg = _cfg(policy_autotune=True)
+    with LSMTree(cfg) as t:
+        t.tuner.hysteresis = 0.0  # nothing can undercut by 100%
+        for lo in range(0, 2000, 500):
+            keys = np.arange(lo, lo + 500).astype(np.uint64)
+            vals = np.array([value_for(lo + j, VW) for j in range(500)],
+                            f"S{VW}")
+            t.put_batch(keys, vals)
+        t.flush()
+        t.compact()
+        assert t.tuner.n_retunes >= 1
+        assert t.tuner.n_switches == 0
+        assert t.policy.kind == "leveled"
+
+
+def test_tuner_min_ops_gate_skips_empty_windows():
+    cfg = _cfg(policy_autotune=True)
+    with LSMTree(cfg) as t:
+        t.put(1, value_for(1))
+        t.flush()
+        assert t.tuner.maybe_retune(t) is None  # one put << min_ops
+        assert t.tuner.n_retunes == 0
+
+
+def test_policy_validation_and_describe():
+    with pytest.raises(ValueError):
+        CompactionPolicy(kind="nope")
+    with pytest.raises(ValueError):
+        CompactionPolicy(kind="hybrid")  # needs a vector
+    with pytest.raises(ValueError):
+        CompactionPolicy(kind="tiered", tier_runs=1)
+    with pytest.raises(ValueError):
+        CompactionPolicy(kind="hybrid", level_modes=("L", "X"))
+    p = CompactionPolicy(kind="hybrid", level_modes=("L", "T", "L"),
+                         size_ratio=6, tier_runs=3)
+    assert p.describe() == "hybrid,T=6,K=3,LTL"
+    assert p.mode(1, 5) == "T" and p.mode(4, 5) == "L"  # vector clamps
+    assert make_policy(_cfg(**POLICIES["lazy_leveled"])).kind \
+        == "lazy_leveled"
+
+
+def test_run_depth_counts_interval_overlap():
+    class R:
+        def __init__(self, lo, hi, n=1):
+            self.min_key, self.max_key, self.n = lo, hi, n
+
+    assert run_depth([]) == 0
+    assert run_depth([R(0, 5), R(6, 9)]) == 1          # disjoint
+    assert run_depth([R(0, 5), R(5, 9)]) == 2          # touching counts
+    assert run_depth([R(0, 9), R(2, 5), R(4, 8)]) == 3
+    assert run_depth([R(0, 9, n=0), R(2, 3)]) == 1     # empty runs ignored
