@@ -1,0 +1,137 @@
+"""Replication benchmarks: follower-read scaling + failover downtime.
+
+    PYTHONPATH=src python -m benchmarks.bench_replica [--smoke]
+
+Three measurements over a leader + F followers (``repro.replica``):
+
+  replica_ingest/fF   write-path replication tax: batch ingest with the
+                      WAL stream shipped to F followers (each applying
+                      through its own memtable/flush pipeline) vs the
+                      F=0 baseline.
+  replica_read/fF     bounded-staleness read routing: a filter workload
+                      routed by ``ReadPolicy``; derived columns report
+                      the follower share (capacity scaling: equally
+                      fresh followers round-robin) and the max observed
+                      lag (must be <= the policy bound, asserted).
+  replica_promote     failover downtime: leader kill -9 -> promote the
+                      freshest follower; ``downtime_ms`` is kill-to-
+                      first-successful-read, ``lost`` the acked records
+                      dropped by the promotion (0 for a caught-up
+                      follower).
+
+``--smoke`` additionally asserts follower reads are bit-identical to
+leader reads before AND after the failover — the CI parity check.
+"""
+
+from __future__ import annotations
+
+import argparse
+import shutil
+import tempfile
+import time
+from typing import List
+
+import numpy as np
+
+from benchmarks._harness import BenchRow, gen_keys, gen_values, timed
+from repro.core import LSMConfig, Predicate
+from repro.replica import ReadPolicy, ReplicatedShard
+
+VW = 32
+N_PREFIXES = 50
+
+
+def _cfg() -> LSMConfig:
+    return LSMConfig(codec="opd", value_width=VW, file_bytes=256 * 1024,
+                     l0_limit=4, size_ratio=8, wal_sync="group")
+
+
+def _preds(n_queries: int) -> List[Predicate]:
+    return [Predicate("prefix", b"cat_%05d_" % (i % N_PREFIXES))
+            for i in range(n_queries)]
+
+
+def _build(root: str, n: int, followers: int, seed: int = 0
+           ) -> tuple:
+    grp = ReplicatedShard(_cfg(), root, n_followers=followers,
+                          read_policy=ReadPolicy(max_lag_seqnos=0))
+    keys = gen_keys(n, seed=seed)
+    vals = gen_values(n, VW, seed=seed + 1)
+    _, ingest_s = timed(grp.put_batch, keys, vals)
+    grp.drain()
+    return grp, ingest_s
+
+
+def run(n: int = 40_000, follower_counts=(0, 1, 2), n_queries: int = 120,
+        smoke: bool = False) -> List[BenchRow]:
+    out: List[BenchRow] = []
+    preds = _preds(n_queries)
+    for f in follower_counts:
+        root = tempfile.mkdtemp(prefix=f"bench_replica_f{f}_")
+        try:
+            grp, ingest_s = _build(root, n, f)
+            rep = grp.replication_report()
+            out.append(BenchRow(
+                f"replica_ingest/f{f}", ingest_s / n * 1e6,
+                {"followers": f, "shipped": sum(
+                    lk["shipped"] for lk in rep["links"].values()),
+                 "head_seqno": rep["head_seqno"]}))
+            _, read_s = timed(lambda: [grp.filter(p) for p in preds])
+            c = grp.read_stats.counts
+            total = c["follower_reads"] + c["leader_reads"]
+            assert c["read_lag_max"] <= grp.read_policy.max_lag_seqnos
+            out.append(BenchRow(
+                f"replica_read/f{f}", read_s / n_queries * 1e6,
+                {"followers": f,
+                 "follower_share": c["follower_reads"] / max(1, total),
+                 "lag_max": c["read_lag_max"]}))
+            if smoke and f:
+                a = grp.leader.filter(preds[0])
+                b = grp.replicas[grp.live_followers()[0]].filter(preds[0])
+                assert a.keys.tolist() == b.keys.tolist()
+                assert a.values.tolist() == b.values.tolist()
+            grp.close()
+        finally:
+            shutil.rmtree(root, ignore_errors=True)
+
+    # failover: kill -9 the leader, promote the freshest follower
+    root = tempfile.mkdtemp(prefix="bench_replica_promote_")
+    try:
+        grp, _ = _build(root, n, 2, seed=7)
+        before = grp.filter(preds[0])
+        head = grp.leader._seqno
+        t_kill = time.perf_counter()
+        grp.kill_leader()
+        best = grp.best_follower()
+        _, promote_s = timed(grp.promote, best)
+        grp.snapshot()               # first routable read on the new epoch
+        downtime_s = time.perf_counter() - t_kill
+        after = grp.filter(preds[0])
+        lost = head - grp.leader._seqno
+        out.append(BenchRow(
+            "replica_promote", promote_s * 1e6,
+            {"downtime_ms": downtime_s * 1e3, "watermark": grp.leader._seqno,
+             "lost": lost, "epoch": grp.epoch}))
+        if smoke:
+            assert lost == 0, "caught-up follower lost acked records"
+            assert after.keys.tolist() == before.keys.tolist()
+            assert after.values.tolist() == before.values.tolist()
+        grp.close()
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=40_000)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small n + bit-identity asserts — CI parity check")
+    args = ap.parse_args()
+    n = 8_000 if args.smoke else args.n
+    for row in run(n, smoke=args.smoke):
+        print(row.csv(), flush=True)
+
+
+if __name__ == "__main__":
+    main()

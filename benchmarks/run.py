@@ -15,7 +15,7 @@ import time
 from benchmarks import (bench_compaction, bench_costmodel, bench_filter,
                         bench_htap, bench_hybrid, bench_insert,
                         bench_kernels, bench_maintenance, bench_ndv_skew,
-                        bench_policy, bench_shard)
+                        bench_policy, bench_replica, bench_shard)
 
 SUITES = {
     # paper Figure 6 (left): insertion throughput vs value size
@@ -55,6 +55,9 @@ SUITES = {
         + bench_policy.run_adaptive(
             n=120_000 if full else 20_000, rounds=10 if full else 6,
             gets=1500 if full else 400, smoke=not full)),
+    # replication: follower-read scaling + failover downtime
+    "replica": lambda full: bench_replica.run(
+        n=60_000 if full else 12_000, smoke=not full),
     # Pallas kernels vs oracles
     "kernels": lambda full: bench_kernels.run(),
 }

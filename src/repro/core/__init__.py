@@ -9,7 +9,7 @@ from repro.core.policy import CompactionPolicy, PolicyTuner, run_depth
 from repro.core.sct import SCT, bitpack, bitunpack, pack_width
 from repro.core.stats import StageStats
 from repro.core.version import Version, VersionEdit, VersionSet
-from repro.core.wal import WALRecord, WALWriter, wal_prefix_for
+from repro.core.wal import WALError, WALRecord, WALWriter, wal_prefix_for
 
 __all__ = [
     "LSMConfig", "LSMTree", "Snapshot", "OPD", "Predicate", "as_fixed_bytes",
@@ -17,5 +17,5 @@ __all__ = [
     "CompactionPolicy", "PolicyTuner", "run_depth",
     "Version", "VersionEdit", "VersionSet",
     "MaintenanceScheduler", "MaintenanceError",
-    "WALRecord", "WALWriter", "wal_prefix_for",
+    "WALError", "WALRecord", "WALWriter", "wal_prefix_for",
 ]

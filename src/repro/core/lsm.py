@@ -444,6 +444,58 @@ class LSMTree:
         if self._sched is not None:
             self._sched.raise_if_failed()
 
+    def raise_maintenance_errors(self) -> None:
+        """Public form of the ingest-path guard, for read-only callers:
+        a ``ScanServer`` that never ingests would otherwise keep serving
+        from a tree whose flush pipeline died hours ago."""
+        self._check_maintenance()
+
+    # ------------------------------------------------------------------ #
+    # replication apply (follower side; repro.replica)
+    # ------------------------------------------------------------------ #
+    def replicate(self, records) -> int:
+        """Follower apply path: install leader-assigned WAL records —
+        the shipped ``core.wal`` stream — through this tree's own
+        WAL/memtable/flush/compaction pipeline.
+
+        Seqnos come from the LEADER (this tree assigns none of its own
+        while it is a follower), so ``_seqno`` doubles as the follower's
+        contiguous *applied watermark*.  Records at or below it are
+        skipped — a resume after a partition re-ships from the durable
+        watermark, and duplicates must be harmless — while a gap above
+        it raises: applying past a hole would break the prefix
+        consistency every failover differential asserts.  Returns the
+        number of records newly applied."""
+        applied = 0
+        for rec in records:
+            if rec.seqno <= self._seqno:
+                continue   # duplicate from a resume: already applied
+            if rec.seqno != self._seqno + 1:
+                raise ValueError(
+                    f"replication gap: applied through {self._seqno}, "
+                    f"next shipped record is {rec.seqno}")
+            self._check_maintenance()
+            crashpoint("apply.record")
+            if self.wal is not None:
+                self.wal.append(rec.op, rec.key, rec.seqno, rec.value)
+            if rec.op == OP_PUT:
+                self.ingest_bytes += (self.cfg.key_bytes + 8
+                                      + self.cfg.value_width)
+                self.memtable.put(rec.key, rec.value, rec.seqno)
+            elif rec.op == OP_DELETE:
+                self.ingest_bytes += self.cfg.key_bytes + 8
+                self.memtable.delete(rec.key, rec.seqno)
+            else:
+                raise ValueError(f"unknown WAL op {rec.op!r}")
+            self._seqno = rec.seqno
+            applied += 1
+            self._after_write()
+        if applied and self.wal is not None:
+            # one group barrier per shipped batch: the follower's
+            # durable watermark (promotion floor) advances with delivery
+            self.wal.sync()
+        return applied
+
     def _after_write(self) -> None:
         if self.memtable.approx_bytes >= self.cfg.mem_bytes:
             self._handle_full_memtable()

@@ -55,12 +55,20 @@ import re
 import struct
 import threading
 import zlib
-from typing import List, Optional, Tuple
+from typing import Callable, List, Optional, Tuple
 
 from repro.testing.crashpoints import crashpoint
 
 OP_PUT = 1
 OP_DELETE = 2
+
+
+class WALError(RuntimeError):
+    """The WAL writer is unusable — a previous fsync failed (fsyncgate:
+    the kernel may have dropped the dirty pages, so nothing appended
+    since the last *successful* sync can be trusted to reach disk) and
+    every subsequent append/sync must fail rather than silently
+    acknowledge writes into an unsyncable tail."""
 
 _HDR = struct.Struct("<II")    # record length, crc32(payload)
 _FIX = struct.Struct("<BQQ")   # op, seqno, key
@@ -143,6 +151,12 @@ class WALWriter:
         self._tail_lens: List[int] = []     # unsynced record lengths
         self._max_seq: Optional[int] = None  # highest seqno in active seg
         self._sealed: List[_Sealed] = []
+        self._poisoned: Optional[BaseException] = None  # first fsync failure
+        # optional replication tap: called under the writer lock with
+        # every appended record, in seqno order — the leader side of WAL
+        # shipping (repro.replica) registers the retention log here so
+        # the replication stream IS the durability stream, bit for bit
+        self.tap: Optional[Callable[[int, int, int, bytes], None]] = None
         # cumulative, across segments
         self.durable_seqno = 0   # highest seqno covered by an fsync
         self.appends = 0
@@ -167,6 +181,7 @@ class WALWriter:
                value: bytes = b"") -> None:
         rec = encode_record(op, seqno, key, value)
         with self._lock:
+            self._check_poisoned()
             f = self._ensure_segment()
             f.write(rec)
             self._written += len(rec)
@@ -174,6 +189,8 @@ class WALWriter:
             self._max_seq = seqno
             self.appends += 1
             self.bytes_written += len(rec)
+            if self.tap is not None:
+                self.tap(op, seqno, key, value)
             crashpoint("wal.after_append")
             if self.mode == "every" or (
                     self._written - self._durable >= self.group_bytes):
@@ -185,11 +202,30 @@ class WALWriter:
         with self._lock:
             self._sync_locked()
 
+    def _check_poisoned(self) -> None:
+        if self._poisoned is not None:
+            raise WALError(
+                "WAL writer poisoned by an earlier fsync failure; the "
+                "unsynced tail may never reach disk — restart and "
+                "restore from the durable prefix") from self._poisoned
+
     def _sync_locked(self) -> None:
+        self._check_poisoned()
         if self._f is None or self._written == self._durable:
             return
-        self._f.flush()
-        os.fsync(self._f.fileno())
+        try:
+            self._f.flush()
+            os.fsync(self._f.fileno())
+        except OSError as e:
+            # fsyncgate: after a failed fsync the kernel may have
+            # discarded the dirty pages, so retrying could "succeed"
+            # while the data is gone.  Poison the writer: the durable
+            # watermark never advances past the failure and every later
+            # append/sync raises instead of silently growing an
+            # unsyncable tail.
+            self._poisoned = e
+            raise WALError(
+                f"WAL fsync failed on {self._path!r}: {e}") from e
         self._durable = self._written
         self._tail_lens = []
         if self._max_seq is not None:
@@ -254,10 +290,13 @@ class WALWriter:
 
     def close(self) -> None:
         """Planned shutdown: make the tail durable, keep the files (a
-        restart replays them)."""
+        restart replays them).  A poisoned writer closes WITHOUT the
+        final sync — the tail past the last good fsync is already lost
+        and restore must see only the durable prefix."""
         with self._lock:
             if self._f is not None:
-                self._sync_locked()
+                if self._poisoned is None:
+                    self._sync_locked()
                 self._f.close()
                 self._f = None
 

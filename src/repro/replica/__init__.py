@@ -1,0 +1,25 @@
+"""Shard replication: leader/follower WAL shipping, bounded-staleness
+follower reads, and crash-safe failover (docs/DESIGN.md §13).
+
+The WAL (``core.wal``) already frames every acknowledged write as a
+seqno-ordered record stream; this package ships that stream to follower
+trees which replay it through their own memtable/flush/compaction
+pipeline, so a follower serves the same packed-code scan/aggregate path
+as the leader at near-zero decode cost.
+"""
+
+from repro.replica.link import (ReplicationLag, ReplicationLink,
+                                ReplicationLog, ResyncRequired)
+from repro.replica.replicated import (EPOCH_FILE, ReadPolicy,
+                                      ReplicaSnapshot, ReplicatedShard)
+
+__all__ = [
+    "ReplicationLink",
+    "ReplicationLog",
+    "ReplicationLag",
+    "ResyncRequired",
+    "ReadPolicy",
+    "ReplicaSnapshot",
+    "ReplicatedShard",
+    "EPOCH_FILE",
+]

@@ -146,6 +146,12 @@ class ScanServer:
         """Fill up to ``max_batch`` slots from the queue and execute them
         as ONE batched filter + ONE batched aggregate, both against a
         single pinned snapshot."""
+        raiser = getattr(self.tree, "raise_maintenance_errors", None)
+        if raiser is not None:
+            # a read-only server must not silently serve over a dead
+            # flush/compaction worker: surface the failure to the
+            # waiting clients instead of swallowing it
+            raiser()
         if not self.queue:
             return {}
         if self.maintenance == "sync" and hasattr(self.tree, "drain"):

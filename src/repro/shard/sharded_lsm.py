@@ -407,6 +407,39 @@ class ShardedLSM:
             # nothing above the manifest watermark — drop the segments
             tree.wal.discard()
 
+    def replace_shard(self, i: int, tree: LSMTree) -> LSMTree:
+        """Swap shard ``i``'s tree for ``tree`` and return the old one —
+        the serving-side failover hook (``repro.replica``): when a
+        replicated shard promotes a follower, routing re-points here
+        without touching the boundary table.
+
+        This is an in-process routing swap, not a durable topology
+        change: the incoming tree keeps its own spill dir, manifest, and
+        WAL (the replica group's EPOCH record owns that durability), so
+        the shard table is deliberately NOT rewritten and the old tree's
+        WAL is NOT discarded — it may be a demoted leader whose segments
+        are its recovery record.  Old stats fold into the retired
+        accumulators so engine-level reports stay monotonic, exactly as
+        across a split."""
+        old = self.shards[i]
+        for name in _STAGE_STATS:
+            self._retired_stages[name] = (
+                self._retired_stages[name].merged(getattr(old, name)))
+        for c in _COUNTERS:
+            self._retired_counts[c] += getattr(old, c)
+        if self.scheduler is not None:
+            self.scheduler.unregister(old)
+        self.shards[i] = tree
+        return old
+
+    def raise_maintenance_errors(self) -> None:
+        """Surface a dead background flush/compaction worker to read
+        paths (``ScanServer.step`` calls this before serving)."""
+        if self.scheduler is not None:
+            self.scheduler.raise_if_failed()
+        for t in self.shards:
+            t.raise_maintenance_errors()
+
     # ------------------------------------------------------------------ #
     # reads (scatter-gather against a pinned snapshot vector)
     # ------------------------------------------------------------------ #

@@ -1,4 +1,5 @@
-"""Deterministic crash-point fault injection (docs/DESIGN.md §10).
+"""Deterministic fault injection: crash points + replication faults
+(docs/DESIGN.md §10, §13).
 
 Durability claims are only as good as the crash schedule they were
 tested under, so the write/flush/compaction/manifest paths are threaded
@@ -25,11 +26,35 @@ Two kill modes:
 
 ``skip=N`` lets the first N hits of the armed site pass, so one site
 can be exercised at several depths of the same workload.
+
+Replication generalizes kills to a **fault registry**: the
+leader/follower protocol (``repro.replica``) has sites where a fault is
+not a process death but a *network condition* — a partitioned link, a
+lagging link.  ``inject(site, kind=...)`` arms such a fault and the
+replication link queries it with ``injected(site)``:
+
+  kind='kill'       identical to ``arm`` (sticky SimulatedCrash) — the
+                    leader-kill / follower-kill / crash-during-promote
+                    schedules.
+  kind='partition'  ``injected`` returns 'partition' while armed; the
+                    link drops the send and the follower falls behind
+                    until ``heal`` (resume then re-ships from the
+                    follower's durable seqno watermark).
+  kind='lag'        ``injected`` returns 'lag'; the link withholds the
+                    newest ``params['seqnos']`` records, modeling a
+                    slow link whose follower trails the leader by a
+                    bounded suffix.
+
+Non-kill faults are per-site, may be armed concurrently at several
+sites, and support ``skip`` (activate after N hits) and ``count``
+(auto-heal after N active hits) so one schedule can partition, deliver,
+and re-partition deterministically.
 """
 
 from __future__ import annotations
 
 import contextlib
+import dataclasses
 import os
 import threading
 from typing import Dict, Iterator, Optional
@@ -52,6 +77,22 @@ CRASH_POINTS = (
     "split.before_table",      # halves installed, SHARDS.json not rewritten
 )
 
+#: Replication-protocol fault sites (ship / apply / promote), enumerated
+#: by the failover matrix (tests/test_replica.py).  Kill faults at these
+#: sites model a dead leader/follower/coordinator; partition and lag
+#: faults model the link conditions in between.
+REPLICA_FAULT_SITES = (
+    "ship.send",               # leader->follower record transfer
+    "apply.record",            # follower applying one shipped record
+    "promote.before_seal",     # failover chosen, new epoch not yet durable
+    "promote.after_seal",      # epoch durable, retention log not truncated
+    "promote.after_truncate",  # log truncated, routing not yet re-pointed
+)
+
+FAULT_SITES = CRASH_POINTS + REPLICA_FAULT_SITES
+
+FAULT_KINDS = ("kill", "partition", "lag")
+
 
 class SimulatedCrash(BaseException):
     """Raised at an armed crash site.  Deliberately a BaseException: a
@@ -60,10 +101,25 @@ class SimulatedCrash(BaseException):
     kill would."""
 
 
-class CrashPointRegistry:
-    """Process-global arming state.  One site may be armed at a time;
-    after it fires the registry is 'crashed' and every site raises
-    until ``disarm`` (the harness disarms after quiescing workers)."""
+@dataclasses.dataclass
+class _Fault:
+    """One armed non-kill fault at one site."""
+    kind: str
+    skip: int = 0                  # hits to let pass before activating
+    count: Optional[int] = None    # active hits before auto-heal
+    params: Dict[str, int] = dataclasses.field(default_factory=dict)
+    hits: int = 0
+    fired: int = 0
+
+
+class FaultRegistry:
+    """Process-global fault state.
+
+    Kill faults keep the legacy crash-point contract: one armed site at
+    a time; after it fires the registry is 'crashed' and every site
+    raises until ``disarm`` (the harness disarms after quiescing
+    workers).  Partition/lag faults are independent per-site toggles
+    queried by the replication link (``injected``) and never raise."""
 
     def __init__(self) -> None:
         self._lock = threading.Lock()
@@ -71,12 +127,15 @@ class CrashPointRegistry:
         self._skip = 0
         self._action = "raise"
         self._crashed = False
+        self._faults: Dict[str, _Fault] = {}
         self.hits: Dict[str, int] = {}   # armed-site hit counts
         self.fired: Optional[str] = None  # last site that actually fired
 
     # ------------------------------------------------------------------ #
+    # kill faults (crash points)
+    # ------------------------------------------------------------------ #
     def arm(self, name: str, skip: int = 0, action: str = "raise") -> None:
-        if name not in CRASH_POINTS:
+        if name not in FAULT_SITES:
             raise ValueError(f"unknown crash point {name!r}")
         if action not in ("raise", "exit"):
             raise ValueError(f"unknown crash action {action!r}")
@@ -95,7 +154,7 @@ class CrashPointRegistry:
 
     @contextlib.contextmanager
     def armed(self, name: str, skip: int = 0,
-              action: str = "raise") -> Iterator["CrashPointRegistry"]:
+              action: str = "raise") -> Iterator["FaultRegistry"]:
         self.arm(name, skip=skip, action=action)
         try:
             yield self
@@ -103,9 +162,63 @@ class CrashPointRegistry:
             self.disarm()
 
     # ------------------------------------------------------------------ #
+    # partition / lag faults (replication links)
+    # ------------------------------------------------------------------ #
+    def inject(self, site: str, kind: str = "kill", skip: int = 0,
+               count: Optional[int] = None, action: str = "raise",
+               **params: int) -> None:
+        """Arm one fault.  ``kind='kill'`` delegates to ``arm`` (the
+        legacy one-at-a-time sticky crash); partition/lag faults stack
+        per site and are read back via ``injected``."""
+        if kind not in FAULT_KINDS:
+            raise ValueError(f"unknown fault kind {kind!r}")
+        if kind == "kill":
+            self.arm(site, skip=skip, action=action)
+            return
+        if site not in FAULT_SITES:
+            raise ValueError(f"unknown fault site {site!r}")
+        with self._lock:
+            self._faults[site] = _Fault(kind, int(skip), count, dict(params))
+
+    def heal(self, site: Optional[str] = None) -> None:
+        """Clear non-kill faults (one site, or all of them)."""
+        with self._lock:
+            if site is None:
+                self._faults = {}
+            else:
+                self._faults.pop(site, None)
+
+    @contextlib.contextmanager
+    def injected_at(self, site: str, kind: str,
+                    **kw) -> Iterator["FaultRegistry"]:
+        self.inject(site, kind=kind, **kw)
+        try:
+            yield self
+        finally:
+            self.heal(site)
+
+    def injected(self, site: str) -> Optional[_Fault]:
+        """Replication-link query: the active non-kill fault at ``site``
+        (None when healthy).  Routes through the kill path first, so a
+        kill armed at a replication site fires here like any crash
+        point."""
+        self.reached(site)
+        with self._lock:
+            f = self._faults.get(site)
+            if f is None:
+                return None
+            f.hits += 1
+            if f.hits <= f.skip:
+                return None
+            if f.count is not None and f.hits - f.skip > f.count:
+                return None
+            f.fired += 1
+            return f
+
+    # ------------------------------------------------------------------ #
     def reached(self, name: str) -> None:
         """Called by the instrumented sites.  The disarmed fast path is
-        two attribute reads and no lock."""
+        two attribute checks and no lock."""
         if self._armed is None and not self._crashed:
             return
         self._fire(name)
@@ -129,10 +242,25 @@ class CrashPointRegistry:
             raise SimulatedCrash(name)
 
 
+#: Backward-compatible alias: the crash-point registry IS the fault
+#: registry, restricted to its kill surface.
+CrashPointRegistry = FaultRegistry
+
 #: The process-wide registry every instrumented site reports to.
-CRASH = CrashPointRegistry()
+CRASH = FaultRegistry()
+
+#: Replication-facing alias of the same registry — fault schedules arm
+#: kills and partitions on one shared instance so a kill mid-schedule
+#: is sticky across every site, exactly like a process death.
+FAULTS = CRASH
 
 
 def crashpoint(name: str) -> None:
     """Site marker: free when disarmed, fatal when armed (see CRASH)."""
     CRASH.reached(name)
+
+
+def fault_at(site: str) -> Optional[_Fault]:
+    """Replication-link site marker: returns the active partition/lag
+    fault (or None), raising ``SimulatedCrash`` when a kill is armed."""
+    return CRASH.injected(site)

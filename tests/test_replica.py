@@ -1,0 +1,553 @@
+"""Replication: leader/follower WAL shipping, bounded-staleness reads,
+and fault-injected failover (docs/DESIGN.md §13).
+
+The contract under test is differential and bit-identical, mirroring
+the WAL recovery suite: after ANY injected fault schedule — partition,
+link lag, leader kill -9, crash during promote — the surviving/promoted
+replica's filter / range / aggregate results must equal a fresh
+sync/no-WAL tree fed exactly the acknowledged prefix (the promoted
+watermark).  Bounded staleness is asserted from the routing telemetry:
+a follower-served read NEVER observes lag above the policy bound.
+
+Fast matrix (tier-1): every schedule on numpy × {sync, background}.
+Full matrix (× jax_packed) runs when ``FAULT_MATRIX=full`` is set —
+wired into the nightly CI job next to ``CRASH_MATRIX=full``.
+"""
+
+import dataclasses
+import os
+import tempfile
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import LSMConfig, LSMTree, Predicate
+from repro.core.maintenance import MaintenanceError
+from repro.query import AggSpec, GroupBy
+from repro.replica import (EPOCH_FILE, ReadPolicy, ReplicatedShard,
+                           ReplicationLag)
+from repro.serving.scan_server import ScanServer
+from repro.shard.sharded_lsm import ShardedLSM
+from repro.testing.crashpoints import (CRASH, FAULTS, REPLICA_FAULT_SITES,
+                                       SimulatedCrash)
+from repro.testing.workload import apply_op, gen_ops, mutations, value_for
+
+VW = 32
+KEY_SPACE = 160
+PRED = Predicate("prefix", b"pfx_01")   # buckets 010-019 of value_for's 60
+AGGS = [AggSpec("count"),
+        AggSpec("count", pred=Predicate("range", b"pfx_01", b"pfx_04")),
+        AggSpec("sum", pred=PRED),
+        AggSpec("min"), AggSpec("max"),
+        AggSpec("group_count", group=GroupBy("prefix", prefix_len=6))]
+
+FULL_MATRIX = os.environ.get("FAULT_MATRIX", "") == "full"
+full_matrix = pytest.mark.skipif(
+    not FULL_MATRIX, reason="full fault matrix: set FAULT_MATRIX=full "
+    "(nightly CI job)")
+
+ENVS = [("numpy", "sync"), ("numpy", "background")]
+FULL_ENVS = [("jax_packed", "sync"), ("jax_packed", "background")]
+
+
+def _cfg(mode="sync", backend="numpy", wal="group", **kw):
+    if backend != "numpy":
+        pytest.importorskip("jax")
+    base = dict(codec="opd", value_width=VW, memtable_bytes=8 * 1024,
+                file_bytes=16 * 1024, l0_limit=2, size_ratio=3,
+                max_levels=5, maintenance=mode, wal_sync=wal,
+                filter_backend=backend, compaction_backend="numpy")
+    base.update(kw)
+    return LSMConfig(**base)
+
+
+def _group(tmp, mode="sync", backend="numpy", n_followers=2, **kw):
+    return ReplicatedShard(_cfg(mode, backend), tmp, n_followers=n_followers,
+                           **kw)
+
+
+def _fresh_prefix(cfg, muts, k):
+    """The oracle: a sync/no-WAL tree fed exactly the first k mutations."""
+    ref = LSMTree(dataclasses.replace(cfg, maintenance="sync",
+                                      wal_sync="off"))
+    for op in muts[:k]:
+        apply_op(ref, op)
+    ref.flush()
+    return ref
+
+
+def _assert_identical(got, ref):
+    """Bit-identical filter + range + aggregate differential."""
+    a, b = got.filter(PRED), ref.filter(PRED)
+    assert a.keys.tolist() == b.keys.tolist()
+    assert a.values.tolist() == b.values.tolist()
+    ka, va = got.range_lookup(0, KEY_SPACE)
+    kb, vb = ref.range_lookup(0, KEY_SPACE)
+    assert ka.tolist() == kb.tolist()
+    assert va.tolist() == vb.tolist()
+    ra = got.aggregate_many(AGGS)
+    rb = ref.aggregate_many(AGGS)
+    for x, y, spec in zip(ra, rb, AGGS):
+        assert x.value == y.value, spec
+        assert x.groups == y.groups, spec
+
+
+@pytest.fixture(autouse=True)
+def _clean_faults():
+    FAULTS.disarm()
+    FAULTS.heal()
+    yield
+    FAULTS.disarm()
+    FAULTS.heal()
+
+
+def _abandon(grp):
+    """Coordinator death: quiesce surviving workers without a planned
+    shutdown (no WAL sync — the on-disk state must stay as-crashed)."""
+    for i, t in grp.replicas.items():
+        if not grp.is_dead(i) and t._sched is not None and t._owns_sched:
+            t._sched.executor.close()
+
+
+# ---------------------------------------------------------------------- #
+# shipping + bounded-staleness routing
+# ---------------------------------------------------------------------- #
+@pytest.mark.parametrize("backend,mode", ENVS)
+def test_followers_track_leader_bit_identically(tmp_path, backend, mode):
+    grp = _group(str(tmp_path), mode, backend)
+    ops = gen_ops(seed=3, n=300, key_space=KEY_SPACE)
+    for op in ops:
+        apply_op(grp, op)
+    grp.drain()
+    rep = grp.replication_report()
+    assert set(rep["watermarks"].values()) == {rep["head_seqno"]}
+    for i in grp.live_followers():
+        _assert_identical(grp.replicas[i], grp.leader)
+    grp.close()
+
+
+def test_bounded_staleness_routing_and_telemetry(tmp_path):
+    grp = _group(str(tmp_path), read_policy=ReadPolicy(max_lag_seqnos=8))
+    ops = gen_ops(seed=5, n=200, key_space=KEY_SPACE)
+    muts = mutations(ops)
+    for op in ops:
+        apply_op(grp, op)
+    grp.drain()
+    # both followers current: reads go to followers, lag 0
+    for _ in range(4):
+        s = grp.snapshot()
+        assert s.follower and s.lag == 0
+    # r1 partitioned, writes continue: r1 exceeds the bound, r2 serves
+    grp.links[1].partition()
+    for op in muts[:20]:
+        apply_op(grp, op)
+    s = grp.snapshot()
+    assert s.replica == 2 and s.lag == 0
+    # r2 lagging but within bound: it still serves, lag recorded
+    grp.links[2].lag_seqnos = 5
+    for op in muts[20:30]:
+        apply_op(grp, op)
+    s = grp.snapshot()
+    assert s.replica == 2 and 0 < s.lag <= 8
+    # both beyond the bound: automatic leader fallback
+    grp.links[2].lag_seqnos = 50
+    for op in muts[30:90]:
+        apply_op(grp, op)
+    s = grp.snapshot()
+    assert not s.follower and s.lag == 0
+    c = grp.read_stats.counts
+    assert c["follower_reads"] >= 6 and c["leader_reads"] >= 1
+    # THE staleness invariant: no follower-served read ever saw lag
+    # above the policy bound
+    assert c["read_lag_max"] <= 8
+    grp.links[1].heal()
+    grp.links[2].lag_seqnos = 0
+    grp.pump()
+    grp.drain()
+    for i in (1, 2):
+        _assert_identical(grp.replicas[i], grp.leader)
+    grp.close()
+
+
+def test_follower_read_capacity_round_robin(tmp_path):
+    grp = _group(str(tmp_path), n_followers=3)
+    for i in range(40):
+        grp.put(i, value_for(i))
+    grp.drain()
+    seen = {grp.snapshot().replica for _ in range(12)}
+    assert seen == {1, 2, 3}   # equally fresh followers share the load
+    grp.close()
+
+
+@pytest.mark.parametrize("backend,mode", ENVS)
+def test_partition_heal_resumes_from_watermark(tmp_path, backend, mode):
+    grp = _group(str(tmp_path), mode, backend)
+    ops = gen_ops(seed=7, n=300, key_space=KEY_SPACE)
+    muts = mutations(ops)
+    for op in ops[:100]:
+        apply_op(grp, op)
+    frozen = grp.replicas[1]._seqno
+    with FAULTS.injected_at("ship.send", kind="partition"):
+        # a registry-scheduled partition blocks EVERY link
+        for op in ops[100:200]:
+            apply_op(grp, op)
+        assert grp.replicas[1]._seqno == frozen
+        assert grp.replicas[2]._seqno == frozen
+    for op in ops[200:]:
+        apply_op(grp, op)
+    grp.pump()
+    grp.drain()
+    assert grp.links[1].resumes >= 1
+    ref = _fresh_prefix(grp.cfg, muts, grp.leader._seqno)
+    for i in (1, 2):
+        _assert_identical(grp.replicas[i], ref)
+    ref.close()
+    grp.close()
+
+
+def test_lag_fault_bounds_follower_suffix(tmp_path):
+    grp = _group(str(tmp_path))
+    with FAULTS.injected_at("ship.send", kind="lag", seqnos=16):
+        for i in range(100):
+            grp.put(i % KEY_SPACE, value_for(i))
+        for i in (1, 2):
+            lag = grp.leader._seqno - grp.replicas[i]._seqno
+            assert 0 < lag <= 16
+    grp.pump()   # healed: the withheld suffix lands
+    assert all(grp.replicas[i]._seqno == grp.leader._seqno for i in (1, 2))
+    grp.close()
+
+
+# ---------------------------------------------------------------------- #
+# failover differentials
+# ---------------------------------------------------------------------- #
+@pytest.mark.parametrize("backend,mode", ENVS)
+def test_leader_kill_promote_differential(tmp_path, backend, mode):
+    grp = _group(str(tmp_path), mode, backend)
+    ops = gen_ops(seed=11, n=300, key_space=KEY_SPACE)
+    muts = mutations(ops)
+    for op in ops:
+        apply_op(grp, op)
+    # r2 trails on a slow link when the leader dies
+    grp.links[2].lag_seqnos = 23
+    for i in range(60):
+        grp.put((7 * i) % KEY_SPACE, value_for(1000 + i))
+        muts.append(("put", (7 * i) % KEY_SPACE, value_for(1000 + i)))
+    grp.kill_leader()
+    # reads survive the failover window (followers within their bound)
+    assert grp.snapshot().follower
+    best = grp.best_follower()
+    assert best == 1
+    w = grp.promote(best)
+    assert w == len(muts)   # r1 was fully caught up: nothing acked is lost
+    grp.drain()
+    ref = _fresh_prefix(grp.cfg, muts, w)
+    _assert_identical(grp, ref)
+    # the lagging r2 was BEHIND the new watermark: retained, caught up
+    assert not grp.is_dead(2)
+    grp.links[2].lag_seqnos = 0
+    grp.pump()
+    grp.drain()
+    _assert_identical(grp.replicas[2], ref)
+    # the new epoch accepts writes and replicates them
+    grp.put(3, b"pfx_000_post")
+    assert grp.replicas[2]._seqno == grp.leader._seqno
+    ref.close()
+    grp.close()
+
+
+def test_promote_stale_follower_drops_divergent_peer(tmp_path):
+    grp = _group(str(tmp_path))
+    ops = gen_ops(seed=13, n=250, key_space=KEY_SPACE)
+    muts = mutations(ops)
+    for op in ops[:150]:
+        apply_op(grp, op)
+    grp.links[1].partition()
+    stale_at = grp.replicas[1]._seqno
+    for op in ops[150:]:
+        apply_op(grp, op)
+    grp.kill_leader()
+    # operator promotes the PARTITIONED follower: everything past its
+    # watermark is lost by decree, and r2 (ahead of it) is divergent
+    w = grp.promote(1)
+    assert w == stale_at
+    assert grp.is_dead(2) and grp.n_divergent_dropped == 1
+    grp.drain()
+    ref = _fresh_prefix(grp.cfg, muts, w)
+    _assert_identical(grp, ref)
+    # snapshot resync brings the divergent replica back into the group
+    grp.resync_follower(2)
+    grp.pump()
+    grp.drain()
+    _assert_identical(grp.replicas[2], ref)
+    ref.close()
+    grp.close()
+
+
+@pytest.mark.parametrize("backend,mode", ENVS)
+def test_follower_kill_restore_rejoins_from_retention(tmp_path, backend,
+                                                      mode):
+    grp = _group(str(tmp_path), mode, backend)
+    ops = gen_ops(seed=17, n=300, key_space=KEY_SPACE)
+    muts = mutations(ops)
+    third = len(ops) // 3
+    for op in ops[:third]:
+        apply_op(grp, op)
+    grp.kill_follower(2)
+    for op in ops[third:]:
+        apply_op(grp, op)
+    # retention held everything past the dead follower's durable ack
+    assert grp.log.floor <= grp._ack_floor[2]
+    grp.restore_follower(2)
+    grp.pump()
+    grp.drain()
+    ref = _fresh_prefix(grp.cfg, muts, grp.leader._seqno)
+    _assert_identical(grp.replicas[2], ref)
+    ref.close()
+    grp.close()
+
+
+@pytest.mark.parametrize("site", ["promote.before_seal",
+                                  "promote.after_seal",
+                                  "promote.after_truncate"])
+@pytest.mark.parametrize("backend,mode", ENVS)
+def test_crash_during_promote_restores_one_epoch(tmp_path, site, backend,
+                                                 mode):
+    """A coordinator crash at any promote site resolves to exactly one
+    authoritative epoch: before the EPOCH rename the OLD leader's
+    durable prefix wins, after it the NEW watermark does — and either
+    way the restored group is bit-identical to that acked prefix."""
+    cfg = _cfg(mode, backend)
+    root = str(tmp_path)
+    grp = ReplicatedShard(cfg, root, n_followers=2)
+    ops = gen_ops(seed=23, n=250, key_space=KEY_SPACE)
+    muts = mutations(ops)
+    for op in ops:
+        apply_op(grp, op)
+    grp.kill_leader()
+    FAULTS.arm(site)
+    with pytest.raises(SimulatedCrash):
+        grp.promote(1)
+    FAULTS.disarm()
+    _abandon(grp)
+    back = ReplicatedShard.restore(cfg, root)
+    committed = site != "promote.before_seal"
+    assert back.epoch == (2 if committed else 1)
+    assert back.leader_idx == (1 if committed else 0)
+    w = back.leader._seqno
+    assert w <= len(muts)
+    back.drain()
+    ref = _fresh_prefix(cfg, muts, w)
+    _assert_identical(back, ref)
+    # every follower realigned (resync for the misfits) and the group
+    # ships again on the restored epoch
+    back.put(5, b"pfx_000_post")
+    for i in back.live_followers():
+        assert back.replicas[i]._seqno == back.leader._seqno
+    # a SECOND promote on the restored group also round-trips
+    w2 = back.promote(back.best_follower())
+    assert w2 == back.leader._seqno
+    ref.close()
+    back.close()
+
+
+def test_kill_mid_ship_then_group_restore(tmp_path):
+    """Coordinator killed inside the shipping path itself."""
+    cfg = _cfg()
+    root = str(tmp_path)
+    grp = ReplicatedShard(cfg, root, n_followers=2)
+    ops = gen_ops(seed=29, n=220, key_space=KEY_SPACE)
+    muts = mutations(ops)
+    fired = False
+    FAULTS.arm("ship.send", skip=150)
+    try:
+        for op in ops:
+            apply_op(grp, op)
+    except SimulatedCrash:
+        fired = True
+    FAULTS.disarm()
+    assert fired
+    _abandon(grp)
+    back = ReplicatedShard.restore(cfg, root)
+    w = back.leader._seqno
+    back.drain()
+    ref = _fresh_prefix(cfg, muts, w)
+    _assert_identical(back, ref)
+    ref.close()
+    back.close()
+
+
+def test_kill_mid_apply_poisons_only_that_follower(tmp_path):
+    """A crash inside a follower's apply path dies on that follower's
+    link; the leader and its peer keep going, and the group recovers
+    the wounded replica by snapshot resync."""
+    grp = _group(str(tmp_path))
+    FAULTS.arm("apply.record", skip=80)
+    fired = False
+    try:
+        for i in range(100):
+            grp.put(i % KEY_SPACE, value_for(i))
+    except SimulatedCrash:
+        fired = True
+    FAULTS.disarm()
+    assert fired
+    # the wounded follower stopped mid-apply; mark it down and resync
+    hurt = min((i for i in grp.links),
+               key=lambda i: grp.replicas[i]._seqno)
+    grp.kill_follower(hurt)
+    for i in range(100, 140):
+        grp.put(i % KEY_SPACE, value_for(i))
+    grp.resync_follower(hurt)
+    grp.pump()
+    grp.drain()
+    _assert_identical(grp.replicas[hurt], grp.leader)
+    grp.close()
+
+
+def test_dead_leader_strict_policy_raises(tmp_path):
+    grp = _group(str(tmp_path), read_policy=ReadPolicy(max_lag_seqnos=0))
+    for i in range(30):
+        grp.put(i, value_for(i))
+    grp.links[1].partition()
+    grp.links[2].partition()
+    for i in range(30, 60):
+        grp.put(i, value_for(i))
+    grp.kill_leader()
+    with pytest.raises(ReplicationLag):
+        grp.snapshot()
+    with pytest.raises(RuntimeError):
+        grp.put(0, b"x")
+    grp.promote(grp.best_follower())   # best effort: freshest follower
+    assert grp.snapshot() is not None
+    grp.close()
+
+
+# ---------------------------------------------------------------------- #
+# full matrix (nightly): jax_packed backend legs
+# ---------------------------------------------------------------------- #
+@full_matrix
+@pytest.mark.parametrize("backend,mode", FULL_ENVS)
+@pytest.mark.parametrize("schedule", ["partition", "lag", "kill", "promote"])
+def test_full_matrix_schedules(tmp_path, backend, mode, schedule):
+    if schedule == "partition":
+        test_partition_heal_resumes_from_watermark(tmp_path, backend, mode)
+    elif schedule == "lag":
+        grp = _group(str(tmp_path), mode, backend)
+        with FAULTS.injected_at("ship.send", kind="lag", seqnos=16):
+            for i in range(120):
+                grp.put(i % KEY_SPACE, value_for(i))
+        grp.pump()
+        grp.drain()
+        for i in (1, 2):
+            _assert_identical(grp.replicas[i], grp.leader)
+        grp.close()
+    elif schedule == "kill":
+        test_leader_kill_promote_differential(tmp_path, backend, mode)
+    else:
+        for site in REPLICA_FAULT_SITES[2:]:
+            d = tmp_path / site
+            d.mkdir()
+            test_crash_during_promote_restores_one_epoch(
+                d, site, backend, mode)
+            FAULTS.disarm()
+
+
+# ---------------------------------------------------------------------- #
+# serving integration
+# ---------------------------------------------------------------------- #
+def test_scan_server_over_replicated_shard_across_promote(tmp_path):
+    grp = _group(str(tmp_path), read_policy=ReadPolicy(max_lag_seqnos=0))
+    ops = gen_ops(seed=31, n=260, key_space=KEY_SPACE)
+    for op in ops:
+        apply_op(grp, op)
+    grp.drain()
+    srv = ScanServer(grp, max_batch=4, maintenance="sync")
+    preds = [Predicate("prefix", b"pfx_0%d" % i) for i in range(6)]
+    rids = srv.submit_many(preds)
+    arid = srv.submit_agg(AggSpec("count"))
+    out = srv.drain()
+    direct = grp.leader.filter_many(preds)
+    for rid, want in zip(rids, direct):
+        assert out[rid].keys.tolist() == want.keys.tolist()
+    assert out[arid].value == grp.leader.aggregate(AggSpec("count")).value
+    # batches were served by followers (policy prefers them at lag 0)
+    assert grp.read_stats.counts["follower_reads"] >= 1
+    # kill + promote between batches: the server keeps serving the
+    # same handle, now routed to the new epoch
+    grp.kill_leader()
+    grp.promote(grp.best_follower())
+    rids2 = srv.submit_many(preds)
+    out2 = srv.drain()
+    for rid, want in zip(rids2, direct):
+        assert out2[rid].keys.tolist() == want.keys.tolist()
+    grp.close()
+
+
+def test_replace_shard_repoints_routing(tmp_path):
+    """ShardedLSM's serving-side failover hook: swap one shard's tree
+    for a promoted replica without touching the boundary table."""
+    cfg = _cfg(wal="off")
+    eng = ShardedLSM(cfg, n_shards=2, key_max=KEY_SPACE,
+                     spill_dir=str(tmp_path / "eng"))
+    ops = gen_ops(seed=37, n=240, key_space=KEY_SPACE)
+    for op in ops:
+        apply_op(eng, op)
+    eng.drain()
+    before = eng.filter(PRED)
+    # build the stand-in the way a promoted follower would be: same
+    # routed mutations, its own spill dir
+    i = 1
+    lo, hi = eng.router.bounds(i)
+    stand_in = LSMTree(cfg, spill_dir=str(tmp_path / "promoted"))
+    for op in mutations(ops):
+        if lo <= op[1] < hi:
+            apply_op(stand_in, op)
+    stand_in.flush()
+    n_before = eng.shape_report()["n_flushes"]
+    old = eng.replace_shard(i, stand_in)
+    assert old is not eng.shards[i]
+    after = eng.filter(PRED)
+    assert after.keys.tolist() == before.keys.tolist()
+    assert after.values.tolist() == before.values.tolist()
+    # retired stats folded: engine-level counters stay monotonic
+    assert eng.shape_report()["n_flushes"] >= n_before
+    old.close()
+    eng.close()
+
+
+def test_scan_server_surfaces_dead_maintenance_worker(tmp_path):
+    """S2 regression: a read-only server must raise, not silently serve
+    stale results, when a background flush worker has died."""
+    cfg = _cfg(mode="background", wal="off")
+    tree = LSMTree(cfg, spill_dir=str(tmp_path))
+    srv = ScanServer(tree, maintenance="background")
+    for i in range(40):
+        tree.put(i, value_for(i))
+    with CRASH.armed("flush.before_manifest"):
+        tree.flush()            # schedules the doomed background flush
+        deadline = time.perf_counter() + 10.0
+        while not tree._sched._errors:
+            assert time.perf_counter() < deadline, "worker never crashed"
+            time.sleep(0.005)
+        srv.submit(PRED)
+        with pytest.raises(MaintenanceError):
+            srv.step()          # no writes in between: only the read
+                                # path can surface the failure
+    tree._sched.executor.close()
+
+
+def test_epoch_file_is_atomic_commit_point(tmp_path):
+    grp = _group(str(tmp_path))
+    import json
+    with open(os.path.join(str(tmp_path), EPOCH_FILE)) as f:
+        meta = json.load(f)
+    assert meta == {"epoch": 1, "leader": 0, "watermark": 0}
+    for i in range(20):
+        grp.put(i, value_for(i))
+    grp.promote(1)
+    with open(os.path.join(str(tmp_path), EPOCH_FILE)) as f:
+        meta = json.load(f)
+    assert meta["epoch"] == 2 and meta["leader"] == 1
+    assert meta["watermark"] == 20
+    grp.close()

@@ -577,3 +577,130 @@ def test_crash_matrix_full_sharded(tmp_path, point, codec, mode, n_shards):
     outcome = _crash_case_sharded(str(tmp_path), codec, mode, "group",
                                   point, n_shards=n_shards)
     _require(outcome, point)
+
+
+# --------------------------------------------------------------------------- #
+# fsync failure (fsyncgate): a failed fsync poisons the writer
+# --------------------------------------------------------------------------- #
+def _failing_fsync(real, suffix=".wal"):
+    """os.fsync stand-in that fails I/O only for WAL segment fds (SCT
+    spills and manifests keep syncing normally)."""
+    def boom(fd):
+        try:
+            path = os.readlink(f"/proc/self/fd/{fd}")
+        except OSError:
+            path = ""
+        if path.endswith(suffix):
+            raise OSError(5, "Input/output error")
+        return real(fd)
+    return boom
+
+
+def test_fsync_failure_poisons_wal_writer(tmp_path, monkeypatch):
+    """S1 contract: after ONE failed fsync the writer is permanently
+    unusable — the kernel may have dropped the dirty pages, so a retry
+    could falsely 'succeed' while the data is gone.  Every later
+    append/sync raises ``WALError`` and the durable watermark never
+    advances past the failure."""
+    from repro.core.wal import WALError
+    w = WALWriter(str(tmp_path), sync="every")
+    w.append(OP_PUT, 1, 1, b"a")
+    assert w.durable_seqno == 1
+    real = os.fsync
+    monkeypatch.setattr(os, "fsync", _failing_fsync(real))
+    with pytest.raises(WALError):
+        w.append(OP_PUT, 2, 2, b"b")     # written, then the fsync fails
+    monkeypatch.setattr(os, "fsync", real)
+    # a healthy kernel call does NOT cure the poisoning
+    with pytest.raises(WALError):
+        w.append(OP_PUT, 3, 3, b"c")
+    with pytest.raises(WALError):
+        w.sync()
+    assert w.durable_seqno == 1
+    w.close()                            # closes WITHOUT the final sync
+    # the rejected append never reached the segment; the failed one may
+    # have (its pages were flushed before the fsync attempt) — either
+    # way the file holds a clean prefix of what was issued
+    path = os.path.join(str(tmp_path), "WAL-00000000.wal")
+    recs, _, clean = parse_segment(open(path, "rb").read())
+    assert clean and [r.seqno for r in recs] in ([1], [1, 2])
+
+
+def test_tree_fsync_failure_fails_writes_durable_prefix_survives(
+        tmp_path, monkeypatch):
+    from repro.core.wal import WALError
+    cfg = _cfg("opd", "sync", "every")
+    tree = LSMTree(cfg, spill_dir=str(tmp_path))
+    for i in range(50):
+        tree.put(i, value_for(i))
+    durable = tree.wal.durable_seqno
+    assert durable == 50
+    monkeypatch.setattr(os, "fsync", _failing_fsync(os.fsync))
+    with pytest.raises(WALError):
+        tree.put(50, value_for(50))
+    with pytest.raises(WALError):
+        tree.put(51, value_for(51))      # still poisoned
+    assert tree.wal.durable_seqno == durable
+    monkeypatch.undo()
+    tree.wal.close()
+    back = LSMTree.restore(cfg, str(tmp_path))
+    K = back._seqno
+    # prefix contract: at least every durable write, at most the issued
+    # sequence (the failed append's pages may have reached the file)
+    assert durable <= K <= 51
+    muts = [("put", i, value_for(i)) for i in range(52)]
+    ka, va = back.range_lookup(0, KEY_SPACE)
+    assert {int(k): bytes(v) for k, v in zip(ka, va)} \
+        == oracle_state(muts, K)
+    back.close()
+
+
+# --------------------------------------------------------------------------- #
+# parse_segment corruption property: a single bit flip can only shorten
+# the parsed stream, never alter or reorder it
+# --------------------------------------------------------------------------- #
+def _bit_flip_case(seed, flip_choice):
+    rng = random.Random(seed)
+    originals = []
+    encoded = []
+    for i in range(rng.randint(1, 12)):
+        op = OP_PUT if rng.random() < 0.8 else OP_DELETE
+        value = bytes(rng.randrange(256)
+                      for _ in range(rng.randrange(0, 40))) \
+            if op == OP_PUT else b""
+        rec = WALRecord(op, i + 1, rng.randrange(1 << 62), value)
+        originals.append(rec)
+        encoded.append(encode_record(rec.op, rec.seqno, rec.key, rec.value))
+    data = b"".join(encoded)
+    # sanity: the uncorrupted segment parses completely and cleanly
+    recs, good, clean = parse_segment(data)
+    assert recs == originals and good == len(data) and clean
+    bit = flip_choice % (len(data) * 8)
+    byte, shift = divmod(bit, 8)
+    corrupt = bytearray(data)
+    corrupt[byte] ^= 1 << shift
+    # which record the flipped byte lives in
+    j, off = 0, 0
+    while byte >= off + len(encoded[j]):
+        off += len(encoded[j])
+        j += 1
+    recs, good, clean = parse_segment(bytes(corrupt))
+    # THE property: parsing yields EXACTLY the records before the hit —
+    # never a mutated record, never a record from beyond the hole
+    assert recs == originals[:j]
+    assert good == off
+    assert not clean
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.integers(0, 2**16), st.integers(0, 2**30))
+def test_parse_segment_single_bit_flip_property(seed, flip_choice):
+    _bit_flip_case(seed, flip_choice)
+
+
+def test_parse_segment_single_bit_flip_seeded():
+    """Deterministic fallback so the property holds in environments
+    without hypothesis (the shim skips the @given test there)."""
+    rng = random.Random(0xC0FFEE)
+    for _ in range(300):
+        _bit_flip_case(rng.randrange(2**16), rng.randrange(2**30))
